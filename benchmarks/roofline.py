@@ -1,0 +1,104 @@
+"""Roofline summary: reads the dry-run JSONs and emits per-cell terms.
+
+Model-FLOPs ratio: MODEL_FLOPS = 6*N_active*tokens (train) or
+2*N_active*tokens (prefill/decode forward), divided over devices, against
+the compiled per-device HLO FLOPs — the useful-compute fraction.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def _active_params(arch: str) -> float:
+    from repro.configs import get_config
+    from repro.models.model import init_params
+
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0)
+    )
+    total = sum(x.size for x in jax.tree.leaves(shapes))
+    expert = 0
+    for gi, (pattern, repeats) in enumerate(cfg.groups):
+        for i, spec in enumerate(pattern):
+            if spec.ffn == "moe":
+                ffn = shapes["groups"][gi][str(i)]["ffn"]
+                for nm in ("w_gate", "w_up", "w_down"):
+                    expert += ffn[nm].size
+    if cfg.moe_experts:
+        total -= expert * (1 - cfg.moe_top_k / cfg.moe_experts)
+    return float(total)
+
+
+def model_flops(arch: str, shape_kind: str, seq: int, batch: int) -> float:
+    n = _active_params(arch)
+    if shape_kind == "train":
+        return 6.0 * n * seq * batch
+    if shape_kind == "prefill":
+        return 2.0 * n * seq * batch
+    return 2.0 * n * batch  # decode: one token per sequence
+
+
+SHAPE_INFO = {
+    "train_4k": ("train", 4096, 256),
+    "prefill_32k": ("prefill", 32768, 32),
+    "decode_32k": ("decode", 32768, 128),
+    "long_500k": ("decode", 524288, 1),
+}
+
+
+def load_cells(mesh: str = "16x16") -> list[dict]:
+    cells = []
+    for path in sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")):
+        cells.append(json.loads(path.read_text()))
+    return cells
+
+
+def rows() -> list[tuple[str, float, str]]:
+    out = _rows_for(DRYRUN_DIR, "roofline")
+    opt = Path("experiments/dryrun_opt")
+    if opt.exists():
+        out += _rows_for(opt, "roofline_opt")
+    return out
+
+
+def _rows_for(dirpath: Path, prefix: str) -> list[tuple[str, float, str]]:
+    out = []
+    active = {}
+    for path in sorted(dirpath.glob("*__16x16.json")):
+        cell = json.loads(path.read_text())
+        arch, shape = cell["arch"], cell["shape"]
+        kind, seq, batch = SHAPE_INFO[shape]
+        if arch not in active:
+            active[arch] = _active_params(arch)
+        mf = model_flops(arch, kind, seq, batch) / cell["devices"]
+        # prefer the scan-trip-count-corrected terms (EXPERIMENTS.md
+        # §Methodology); fall back to raw for old artifacts
+        if "corrected" in cell:
+            hlo_f = cell["corrected"]["flops_per_device"]
+            rt = cell["roofline_corrected"]
+            dominant = cell["bottleneck_corrected"]
+        else:
+            hlo_f = cell["flops_per_device"]
+            rt = cell["roofline"]
+            dominant = cell["bottleneck"]
+        dom_s = rt[f"{dominant}_s"] if rt.get(f"{dominant}_s") else 0.0
+        useful = mf / hlo_f if hlo_f and hlo_f > 0 else float("nan")
+        # roofline fraction: ideal compute time / dominant term
+        ideal = mf / 197e12
+        frac = ideal / dom_s if dom_s else float("nan")
+        out.append(
+            (
+                f"{prefix}/{arch}/{shape}",
+                dom_s * 1e6,
+                f"bottleneck={dominant} compute_s={rt['compute_s']:.4g} "
+                f"memory_s={rt['memory_s']:.4g} collective_s={rt['collective_s']:.4g} "
+                f"model/hlo_flops={useful:.3f} roofline_frac={frac:.4f}",
+            )
+        )
+    return out

@@ -1,0 +1,49 @@
+"""Federated learning over a 24-vehicle fleet with dropout, stragglers
+and int8-compressed uploads — the paper's §8 distributed-learning use
+case on the faithful platform implementation.
+
+Every round is an assignment; vehicles drop out mid-round (ignition off);
+the deadline cancels stragglers; the server aggregates whatever arrived.
+Watch `dist_to_optimum` fall anyway.
+
+Run: PYTHONPATH=src python examples/federated_fleet.py
+"""
+import numpy as np
+
+from repro.core import User, make_platform
+from repro.core.signals import constant
+from repro.fleet import FedConfig, FederatedDriver, FleetPool
+
+
+def main() -> None:
+    store, broker, servers = make_platform(n_servers=2)
+    server = servers[0]
+    pool = FleetPool(
+        store,
+        broker,
+        server,
+        n_vehicles=24,
+        signal_fn=lambda i: {"Vehicle.RoadGrade": constant(0.01 * (i % 5))},
+    )
+    user = User(server, broker)
+    dim = 32
+    driver = FederatedDriver(
+        user,
+        FedConfig(local_steps=4, local_lr=0.15, deadline_fraction=0.75),
+        dim=dim,
+        w_true=np.sin(np.linspace(0, 3, dim)).astype(np.float32),
+    )
+    print(f"{'round':>5} {'clients':>8} {'canceled':>9} {'client_loss':>12} {'dist':>8}")
+    for rnd in range(8):
+        rec = driver.run_round(rnd, pump=lambda: pool.pump(dropout_prob=0.04))
+        print(
+            f"{rec['round']:>5} {rec['participants']:>8} {rec['canceled']:>9} "
+            f"{rec['mean_client_loss']:>12.4f} {rec['dist_to_optimum']:>8.4f}"
+        )
+    first, last = driver.history[0], driver.history[-1]
+    assert last["dist_to_optimum"] < first["dist_to_optimum"]
+    print("converged despite dropout + stragglers — OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""repro.core — the AutoSPADA platform: the paper's primary contribution.
+
+State-based task orchestration for unreliable distributed workers:
+centralized versioned state, logical-clock notifications, an Algorithm-1
+sync loop on every client, container-semantics task execution, and a
+plain-Python user programming model.
+"""
+from repro.core.broker import Broker, FaultPlan, client_clock_topic
+from repro.core.client import EdgeClient, LocalDisk
+from repro.core.documents import (
+    Assignment,
+    Parameters,
+    Payload,
+    Result,
+    Task,
+    TaskStatus,
+)
+from repro.core.faults import FlakyServer, NetworkError
+from repro.core.payload_api import PayloadContext, TaskCanceled, dummy_context
+from repro.core.sandbox import ContainerExit, ResourceLimits, run_inline
+from repro.core.server import Server, make_platform
+from repro.core.signals import (
+    CsvSignalBroker,
+    RandomSignalBroker,
+    ScriptedSignalBroker,
+    SignalHandler,
+)
+from repro.core.statestore import StateStore
+from repro.core.user import User
+
+__all__ = [
+    "Assignment", "Broker", "ContainerExit", "CsvSignalBroker", "EdgeClient",
+    "FaultPlan", "FlakyServer", "LocalDisk", "NetworkError", "Parameters",
+    "Payload", "PayloadContext", "RandomSignalBroker", "ResourceLimits",
+    "Result", "ScriptedSignalBroker", "Server", "SignalHandler", "StateStore",
+    "Task", "TaskCanceled", "TaskStatus", "User", "client_clock_topic",
+    "dummy_context", "make_platform", "run_inline",
+]

@@ -1,0 +1,129 @@
+"""MQTT/AMQP-like topic broker (paper §3.4.1).
+
+The paper uses RabbitMQ: an MQTT bridge toward clients (minimal
+notifications — just the client's current logical-clock value) and AMQP
+toward users (streaming results/status updates). We reproduce the delivery
+semantics the platform depends on:
+
+* topic-based pub/sub with per-subscriber FIFO queues;
+* QoS 0 ("at most once") and QoS 1 ("at least once" — RabbitMQ's MQTT
+  plugin caps at QoS 1, which the paper calls out) — QoS 1 redelivers
+  until acked and may therefore duplicate;
+* **fault injection** (drop / duplicate / delay) so the resiliency claims
+  (§2.3, §3.3.1) are *testable*: the sync-loop property tests drive the
+  platform through lossy-broker schedules.
+
+Because the notification payload is only a monotone counter, dropped or
+duplicated notifications are harmless by design — that is the paper's core
+resiliency argument, and the property tests in tests/test_syncloop_prop.py
+check it mechanically.
+"""
+from __future__ import annotations
+
+import fnmatch
+import itertools
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator
+
+
+@dataclass(frozen=True)
+class Message:
+    topic: str
+    value: Any
+    msg_id: int
+    qos: int = 0
+
+
+@dataclass
+class FaultPlan:
+    """Deterministic fault schedule: callables decide per message."""
+
+    drop: Callable[[Message], bool] = lambda m: False
+    duplicate: Callable[[Message], bool] = lambda m: False
+
+
+class Subscription:
+    """A per-subscriber FIFO queue. `poll()` is non-blocking (the simulated
+    clients run event loops, not threads); `drain()` yields all pending."""
+
+    def __init__(self, pattern: str, qos: int):
+        self.pattern = pattern
+        self.qos = qos
+        self._queue: deque[Message] = deque()
+        self._lock = threading.Lock()
+
+    def _offer(self, msg: Message) -> None:
+        with self._lock:
+            self._queue.append(msg)
+
+    def poll(self) -> Message | None:
+        with self._lock:
+            return self._queue.popleft() if self._queue else None
+
+    def drain(self) -> Iterator[Message]:
+        while True:
+            m = self.poll()
+            if m is None:
+                return
+            yield m
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+
+class Broker:
+    def __init__(self, faults: FaultPlan | None = None):
+        self._subs: list[Subscription] = []
+        self._faults = faults or FaultPlan()
+        self._ids = itertools.count()
+        self._lock = threading.Lock()
+        self.published = 0
+        self.delivered = 0
+        self.dropped = 0
+
+    def subscribe(self, pattern: str, qos: int = 0) -> Subscription:
+        sub = Subscription(pattern, qos)
+        with self._lock:
+            self._subs.append(sub)
+        return sub
+
+    def unsubscribe(self, sub: Subscription) -> None:
+        with self._lock:
+            if sub in self._subs:
+                self._subs.remove(sub)
+
+    def publish(self, topic: str, value: Any, qos: int = 0) -> Message:
+        msg = Message(topic=topic, value=value, msg_id=next(self._ids), qos=qos)
+        self.published += 1
+        with self._lock:
+            subs = [s for s in self._subs if fnmatch.fnmatch(topic, s.pattern)]
+        for sub in subs:
+            eff_qos = min(qos, sub.qos)
+            if eff_qos == 0 and self._faults.drop(msg):
+                self.dropped += 1
+                continue
+            sub._offer(msg)
+            self.delivered += 1
+            # QoS 1 = at-least-once: fault plan may force a redelivery.
+            if eff_qos >= 1 and self._faults.duplicate(msg):
+                sub._offer(msg)
+                self.delivered += 1
+        return msg
+
+
+# Topic helpers -------------------------------------------------------- #
+def client_clock_topic(client_id: str) -> str:
+    """Per-client MQTT topic carrying only the state revision counter."""
+    return f"clients/{client_id}/clock"
+
+
+def assignment_results_topic(assignment_id: str) -> str:
+    """AMQP-style topic users subscribe to for streaming results."""
+    return f"assignments/{assignment_id}/results"
+
+
+def assignment_status_topic(assignment_id: str) -> str:
+    return f"assignments/{assignment_id}/status"

@@ -1,0 +1,115 @@
+"""The in-payload `autospada` client library (paper §5.1).
+
+Core functionality available to payload code:
+  * ``get_signal(name)``        — read the latest value of a vehicle signal
+  * ``publish(value)``          — publish a JSON-serializable result
+  * ``get_parameters()``        — read the task's parameters document
+  * ``cache_state(value)``      — persist intermediate state (survives
+                                  client restarts; removed on completion)
+  * ``load_state()``            — read previously cached state
+  * ``sleep(seconds)``          — cancellation-aware sleep
+
+Two modes, matching §5.1.1:
+  * **attached** — wired to a live client's signal/result handlers (the
+    containerized production path);
+  * **dummy**    — stand-alone: random signal values, publishes print to
+    stdout, so any payload runs as an ordinary Python script.
+
+Cancellation: a cooperative flag checked on every API call (the in-process
+analogue of `docker stop`'s SIGTERM): raises ``TaskCanceled``.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+
+class TaskCanceled(Exception):
+    """Raised inside payload code when the task has been canceled."""
+
+
+class PayloadContext:
+    """One task-container's view of the world."""
+
+    def __init__(
+        self,
+        *,
+        get_signal: Callable[[str], float | None],
+        publish: Callable[[Any], None],
+        parameters: Any = None,
+        state_cache: dict[str, Any] | None = None,
+        task_key: str = "local",
+        cancel_event: threading.Event | None = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self._get_signal = get_signal
+        self._publish = publish
+        self._parameters = parameters
+        self._state_cache = state_cache if state_cache is not None else {}
+        self._task_key = task_key
+        self._cancel = cancel_event or threading.Event()
+        self._clock = clock
+        self.published_count = 0
+
+    # -- cancellation ------------------------------------------------- #
+    def _check_cancel(self) -> None:
+        if self._cancel.is_set():
+            raise TaskCanceled(self._task_key)
+
+    def cancel(self) -> None:
+        self._cancel.set()
+
+    # -- the user-facing API ------------------------------------------ #
+    def get_signal(self, name: str) -> float | None:
+        self._check_cancel()
+        return self._get_signal(name)
+
+    def publish(self, value: Any) -> None:
+        self._check_cancel()
+        json.dumps(value, default=str)  # enforce JSON-serializability
+        self._publish(value)
+        self.published_count += 1
+
+    def get_parameters(self) -> Any:
+        self._check_cancel()
+        return self._parameters
+
+    def cache_state(self, value: Any) -> None:
+        self._check_cancel()
+        self._state_cache[self._task_key] = value
+
+    def load_state(self) -> Any:
+        self._check_cancel()
+        return self._state_cache.get(self._task_key)
+
+    def clear_state(self) -> None:
+        self._state_cache.pop(self._task_key, None)
+
+    def sleep(self, seconds: float) -> None:
+        """Cancellation-aware sleep; in simulation the clock is virtual."""
+        deadline = self._clock() + seconds
+        while self._clock() < deadline:
+            self._check_cancel()
+            time.sleep(min(0.002, max(0.0, deadline - self._clock())))
+
+    def time(self) -> float:
+        return self._clock()
+
+
+def dummy_context(seed: int = 0, parameters: Any = None) -> PayloadContext:
+    """Paper §5.1.1: 'By default, the autospada library acts as a dummy
+    library that returns random values for any signal and prints messages
+    to standard output when side effects occur.'"""
+    rng = np.random.default_rng(seed)
+
+    def get_signal(name: str) -> float:
+        return float(rng.standard_normal())
+
+    def publish(value: Any) -> None:
+        print(f"[autospada dummy] publish: {json.dumps(value, default=str)}")
+
+    return PayloadContext(get_signal=get_signal, publish=publish, parameters=parameters)

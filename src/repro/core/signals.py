@@ -1,0 +1,131 @@
+"""Signal sources (paper §4.2.4).
+
+The paper's Signal Handler subscribes to the WICE Signal Broker (CAN /
+FlexRay buses) and keeps the *latest observed value* per signal in memory —
+"the simplest way to determine the present value of stateful and infrequent
+signals". We reproduce that normalization layer:
+
+* `SignalBroker` — abstract pub/sub signal source;
+* `RandomSignalBroker` — the paper's §5.1.1 "dummy library" behaviour
+  (random values for any signal) used for local payload testing;
+* `CsvSignalBroker` — the paper's §5.1.1 CSV playback ("control the values
+  of signals by providing a CSV file with hard-coded signal values");
+* `ScriptedSignalBroker` — deterministic programmable source for tests and
+  the vehicle-fleet simulation;
+* `SignalHandler` — the client-side proxy + latest-value cache that tasks
+  actually read from, insulating payloads from the concrete source.
+"""
+from __future__ import annotations
+
+import csv
+import io
+import itertools
+import threading
+from typing import Callable, Iterable, Iterator, Mapping
+
+import numpy as np
+
+
+class SignalBroker:
+    """Pub/sub source of (signal_name, value) observations."""
+
+    def subscribe(self, names: Iterable[str], cb: Callable[[str, float], None]) -> None:
+        raise NotImplementedError
+
+    def tick(self) -> None:
+        """Advance the source one step (simulation hook)."""
+        raise NotImplementedError
+
+
+class RandomSignalBroker(SignalBroker):
+    def __init__(self, seed: int = 0):
+        self._rng = np.random.default_rng(seed)
+        self._subs: list[tuple[list[str], Callable[[str, float], None]]] = []
+
+    def subscribe(self, names, cb):
+        self._subs.append((list(names), cb))
+        for n in list(names):  # immediately provide a value
+            cb(n, float(self._rng.standard_normal()))
+
+    def tick(self):
+        for names, cb in self._subs:
+            for n in names:
+                cb(n, float(self._rng.standard_normal()))
+
+
+class ScriptedSignalBroker(SignalBroker):
+    """Signals driven by user-supplied iterators — deterministic tests.
+
+    Subscription delivers the next scripted value immediately (MQTT
+    retained-message semantics): a late subscriber still observes the
+    signal's current value, matching the paper's latest-value cache intent.
+    """
+
+    def __init__(self, scripts: Mapping[str, Iterator[float]]):
+        self._scripts = {k: iter(v) for k, v in scripts.items()}
+        self._subs: list[tuple[list[str], Callable[[str, float], None]]] = []
+
+    def subscribe(self, names, cb):
+        self._subs.append((list(names), cb))
+        for n in list(names):
+            it = self._scripts.get(n)
+            if it is None:
+                continue
+            try:
+                cb(n, float(next(it)))
+            except StopIteration:
+                pass
+
+    def tick(self):
+        for names, cb in self._subs:
+            for n in names:
+                it = self._scripts.get(n)
+                if it is None:
+                    continue
+                try:
+                    cb(n, float(next(it)))
+                except StopIteration:
+                    pass
+
+
+class CsvSignalBroker(ScriptedSignalBroker):
+    """CSV playback: one column per signal, one row per tick."""
+
+    def __init__(self, csv_text: str):
+        reader = csv.DictReader(io.StringIO(csv_text))
+        columns: dict[str, list[float]] = {}
+        for row in reader:
+            for k, v in row.items():
+                columns.setdefault(k, []).append(float(v))
+        super().__init__({k: iter(v) for k, v in columns.items()})
+
+
+class SignalHandler:
+    """Client component: subscribes to the broker, caches the latest value
+    of every signal a task has asked about (paper Fig. 4)."""
+
+    def __init__(self, broker: SignalBroker):
+        self._broker = broker
+        self._latest: dict[str, float] = {}
+        self._lock = threading.Lock()
+        self._known: set[str] = set()
+
+    def _observe(self, name: str, value: float) -> None:
+        with self._lock:
+            self._latest[name] = value
+
+    def ensure_subscribed(self, name: str) -> None:
+        with self._lock:
+            if name in self._known:
+                return
+            self._known.add(name)
+        self._broker.subscribe([name], self._observe)
+
+    def get(self, name: str) -> float | None:
+        self.ensure_subscribed(name)
+        with self._lock:
+            return self._latest.get(name)
+
+
+def constant(v: float) -> Iterator[float]:
+    return itertools.repeat(float(v))

@@ -1,0 +1,203 @@
+"""The user library (paper §5.2): `User`, document builders, method
+chaining, and streaming/await result retrieval.
+
+Mirrors the paper's workflow::
+
+    user    = User(server, broker)
+    payload = user.payload(source)
+    params  = user.parameter({"seconds": 5, "signal_name": name})
+    tasks   = [user.task(c, payload, params) for c in user.online_clients()]
+    assign  = user.assignment("Mean speed", tasks)
+    results = assign.commit().await_results(pump)
+
+Documents are *builders* until `commit()` — nothing touches the database
+before that, matching "this payload object has not yet been committed".
+`await_results`/`stream` consume the AMQP-style topics the server publishes
+result/status updates on; `results()` is the on-demand retrieval path.
+
+Because the whole platform is simulated in-process, blocking waits take a
+`pump` callable that advances the world (delivers broker messages, steps
+clients). Live deployments would simply block on the queue.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator
+
+from repro.core.broker import (
+    Broker,
+    assignment_results_topic,
+    assignment_status_topic,
+)
+from repro.core.documents import TaskStatus
+
+TERMINAL = {TaskStatus.FINISHED, TaskStatus.ERROR, TaskStatus.CANCELED}
+
+
+@dataclass
+class PayloadDoc:
+    user: "User"
+    source: str
+    name: str = ""
+    payload_id: str | None = None
+
+    def commit(self) -> "PayloadDoc":
+        if self.payload_id is None:
+            self.payload_id = self.user.server.create_payload(
+                self.source, self.name
+            ).payload_id
+        return self
+
+
+@dataclass
+class ParametersDoc:
+    user: "User"
+    value: Any
+    parameters_id: str | None = None
+
+    def commit(self) -> "ParametersDoc":
+        if self.parameters_id is None:
+            self.parameters_id = self.user.server.create_parameters(
+                self.value
+            ).parameters_id
+        return self
+
+
+@dataclass
+class TaskDoc:
+    user: "User"
+    client_id: str
+    payload: PayloadDoc
+    parameters: ParametersDoc | None = None
+    task_id: str | None = None
+
+
+@dataclass
+class AssignmentDoc:
+    user: "User"
+    name: str
+    tasks: list[TaskDoc]
+    assignment_id: str | None = None
+    _results_sub: Any = field(default=None, repr=False)
+    _status_sub: Any = field(default=None, repr=False)
+
+    # ------------------------------------------------------------------ #
+    def commit(self) -> "AssignmentDoc":
+        """Commit the assignment and every related uncommitted document
+        (paper: 'including all related documents if they have not been
+        committed yet'). Subscribes to result/status streams *before* the
+        tasks become visible so no update can be missed."""
+        if self.assignment_id is not None:
+            return self
+        for t in self.tasks:
+            t.payload.commit()
+            if t.parameters is not None:
+                t.parameters.commit()
+        specs = [
+            (
+                t.client_id,
+                t.payload.payload_id,
+                t.parameters.parameters_id if t.parameters else None,
+            )
+            for t in self.tasks
+        ]
+        # Pre-subscribe with a wildcard: the assignment id is not known
+        # until creation, but subscribing before task visibility matters
+        # more; we filter by assignment afterwards.
+        results_sub = self.user.broker.subscribe("assignments/*/results", qos=1)
+        status_sub = self.user.broker.subscribe("assignments/*/status", qos=1)
+        assignment = self.user.server.create_assignment(self.name, specs)
+        self.assignment_id = assignment.assignment_id
+        for t, task_id in zip(self.tasks, assignment.task_ids):
+            t.task_id = task_id
+        self._results_sub = results_sub
+        self._status_sub = status_sub
+        return self
+
+    # ------------------------------------------------------------------ #
+    def _my_topic(self, kind: str) -> str:
+        assert self.assignment_id is not None
+        return (
+            assignment_results_topic(self.assignment_id)
+            if kind == "results"
+            else assignment_status_topic(self.assignment_id)
+        )
+
+    def stream_results(self) -> Iterator[dict]:
+        """Lazy iterator over result messages received so far."""
+        topic = self._my_topic("results")
+        for msg in self._results_sub.drain():
+            if msg.topic == topic:
+                yield msg.value
+
+    def statuses(self) -> dict[str, str]:
+        """Current task statuses, on demand (stateless server read)."""
+        out = {}
+        for t in self.tasks:
+            assert t.task_id is not None
+            out[t.task_id] = self.user.server.task(t.task_id).status.value
+        return out
+
+    def await_results(
+        self,
+        pump: Callable[[], None],
+        max_pumps: int = 100_000,
+    ) -> dict[str, list[Any]]:
+        """Wait for all tasks to finish, then return all results
+        (paper §5.2.1's `assign.commit().await_results()`).
+
+        `pump()` advances the simulated world one step; a real deployment
+        would block on the AMQP queue instead."""
+        assert self.assignment_id is not None, "commit() first"
+        for _ in range(max_pumps):
+            statuses = self.statuses()
+            if all(s != TaskStatus.ACTIVE.value for s in statuses.values()):
+                return self.results()
+            pump()
+        raise TimeoutError("assignment did not finish")
+
+    def results(self) -> dict[str, list[Any]]:
+        """On-demand retrieval of every recorded result per task."""
+        out: dict[str, list[Any]] = {}
+        for t in self.tasks:
+            assert t.task_id is not None
+            out[t.task_id] = [
+                r.value for r in self.user.server.results(t.task_id)
+            ]
+        return out
+
+    def cancel(self) -> int:
+        n = 0
+        for t in self.tasks:
+            assert t.task_id is not None
+            n += bool(self.user.server.cancel_task(t.task_id))
+        return n
+
+
+class User:
+    """Entry point for everything a user does (paper §5.2: 'provides the
+    User class through which all actions to the server are made')."""
+
+    def __init__(self, server: Any, broker: Broker):
+        self.server = server
+        self.broker = broker
+
+    def online_clients(self) -> list[str]:
+        return self.server.online_clients()
+
+    def payload(self, source: str, name: str = "") -> PayloadDoc:
+        return PayloadDoc(self, source, name)
+
+    def parameter(self, value: Any) -> ParametersDoc:
+        return ParametersDoc(self, value)
+
+    def task(
+        self,
+        client_id: str,
+        payload: PayloadDoc,
+        parameters: ParametersDoc | None = None,
+    ) -> TaskDoc:
+        return TaskDoc(self, client_id, payload, parameters)
+
+    def assignment(self, name: str, tasks: list[TaskDoc]) -> AssignmentDoc:
+        return AssignmentDoc(self, name, tasks)

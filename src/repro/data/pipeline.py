@@ -1,0 +1,84 @@
+"""Deterministic synthetic data pipeline.
+
+Produces per-host shards of the global batch (tokens/labels or frontend
+embeddings per ArchConfig) from a stateless (seed, step) -> batch map, so
+any rank can regenerate any step — which is what makes the checkpoint/
+restart and elastic re-mesh paths exact: no data-loader state to persist.
+A real deployment swaps `synthetic_batch` for a deterministic-sharded
+file reader; the (seed, step) contract is the interface.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import ArchConfig
+
+
+def synthetic_batch(
+    cfg: ArchConfig,
+    *,
+    batch: int,
+    seq: int,
+    seed: int,
+    step: int,
+    train: bool = True,
+) -> dict[str, Any]:
+    """Global batch for `step` (identical on every host; slice per host
+    with `host_shard`). Markov-chain-ish tokens so the loss is learnable."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    V = cfg.vocab_size
+    if cfg.uses_embedding_input:
+        out = {
+            "frame_embeds": jnp.asarray(
+                rng.standard_normal((batch, seq, cfg.d_model)), cfg.dtype
+            )
+        }
+        if train:
+            out["labels"] = jnp.asarray(
+                rng.integers(0, V, (batch, seq, cfg.n_codebooks)), jnp.int32
+            )
+        return out
+    # learnable structure: tokens follow t[i+1] = (a*t[i]+b) mod V with noise
+    a, b = 31, 17
+    t0 = rng.integers(0, V, (batch, 1))
+    noise = rng.random((batch, seq)) < 0.1
+    toks = np.empty((batch, seq), np.int64)
+    toks[:, 0] = t0[:, 0]
+    for i in range(1, seq):
+        toks[:, i] = (a * toks[:, i - 1] + b) % V
+    toks = np.where(noise, rng.integers(0, V, (batch, seq)), toks)
+    if cfg.frontend == "vit_stub":
+        P = cfg.n_patches
+        out = {
+            "patch_embeds": jnp.asarray(
+                rng.standard_normal((batch, P, cfg.d_model)), cfg.dtype
+            ),
+            "tokens": jnp.asarray(toks[:, : seq - P], jnp.int32),
+        }
+        if train:
+            labels = np.concatenate(
+                [np.full((batch, P), -1), toks[:, : seq - P]], axis=1
+            )
+            out["labels"] = jnp.asarray(labels, jnp.int32)
+        return out
+    out = {"tokens": jnp.asarray(toks, jnp.int32)}
+    if train:
+        labels = np.concatenate(
+            [toks[:, 1:], np.full((batch, 1), -1)], axis=1
+        )
+        out["labels"] = jnp.asarray(labels, jnp.int32)
+    return out
+
+
+def host_shard(batch: dict[str, Any], host_index: int, n_hosts: int) -> dict[str, Any]:
+    """Slice this host's rows of the global batch."""
+
+    def slc(x):
+        per = x.shape[0] // n_hosts
+        return x[host_index * per : (host_index + 1) * per]
+
+    return jax.tree.map(slc, batch)

@@ -1,0 +1,9 @@
+from repro.fleet.compression import ErrorFeedback, make_codec
+from repro.fleet.federated import FedConfig, aggregate_deltas, client_delta, local_sgd
+from repro.fleet.elastic import FleetPool
+from repro.fleet.rounds import FederatedDriver
+
+__all__ = [
+    "ErrorFeedback", "FedConfig", "FederatedDriver", "FleetPool",
+    "aggregate_deltas", "client_delta", "local_sgd", "make_codec",
+]

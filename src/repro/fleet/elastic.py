@@ -1,0 +1,98 @@
+"""Elastic client pool: vehicles join, drop, and return (paper §2.3 —
+no availability assumption is ever made).
+
+The pool owns the simulated fleet: each vehicle is an EdgeClient over its
+own LocalDisk (so a returning vehicle resumes with its cached state) plus
+a scripted signal broker. `pump()` advances every *online* vehicle's sync
+loop; offline vehicles simply do not run — exactly a vehicle with the
+ignition off. Deterministic dropout schedules make the fault-tolerance
+tests reproducible.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.broker import Broker
+from repro.core.client import EdgeClient, LocalDisk
+from repro.core.signals import ScriptedSignalBroker, constant
+from repro.core.statestore import StateStore
+
+
+@dataclass
+class Vehicle:
+    client_id: str
+    disk: LocalDisk
+    signals: ScriptedSignalBroker
+    client: EdgeClient | None = None  # None => powered off
+    metadata: dict[str, Any] = field(default_factory=dict)
+
+
+class FleetPool:
+    def __init__(
+        self,
+        store: StateStore,
+        broker: Broker,
+        server: Any,
+        *,
+        n_vehicles: int,
+        signal_fn: Callable[[int], dict] | None = None,
+        seed: int = 0,
+    ):
+        self.store = store
+        self.broker = broker
+        self.server = server
+        self.rng = np.random.default_rng(seed)
+        self.vehicles: dict[str, Vehicle] = {}
+        for i in range(n_vehicles):
+            cid = f"veh-{i:03d}"
+            signals = ScriptedSignalBroker(
+                signal_fn(i) if signal_fn else {"Vehicle.RoadGrade": constant(0.1 * i)}
+            )
+            self.vehicles[cid] = Vehicle(
+                client_id=cid,
+                disk=LocalDisk(),
+                signals=signals,
+                metadata={"sensors": ["Vehicle.RoadGrade"], "index": i},
+            )
+            self.power_on(cid)
+
+    # -- power control -------------------------------------------------- #
+    def power_on(self, cid: str) -> None:
+        v = self.vehicles[cid]
+        if v.client is not None:
+            return
+        v.client = EdgeClient(
+            cid, self.server, self.broker, disk=v.disk,
+            signal_broker=v.signals, metadata=v.metadata,
+        )
+        v.client.bootstrap()
+        self.store.set_online(cid, True)
+
+    def power_off(self, cid: str) -> None:
+        """Ignition off mid-anything: volatile state is lost, disk survives."""
+        v = self.vehicles[cid]
+        if v.client is None:
+            return
+        v.client.shutdown()
+        v.client = None
+        self.store.set_online(cid, False)
+
+    def online(self) -> list[str]:
+        return [cid for cid, v in self.vehicles.items() if v.client is not None]
+
+    # -- simulation ------------------------------------------------------#
+    def pump(self, dropout_prob: float = 0.0) -> None:
+        """One world step: random dropout/return, signal ticks, sync loops."""
+        for cid, v in self.vehicles.items():
+            if dropout_prob and self.rng.random() < dropout_prob:
+                if v.client is None:
+                    self.power_on(cid)
+                else:
+                    self.power_off(cid)
+        for v in self.vehicles.values():
+            v.signals.tick()
+            if v.client is not None:
+                v.client.run_until_idle()

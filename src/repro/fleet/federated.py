@@ -1,0 +1,121 @@
+"""Federated learning over the AutoSPADA platform.
+
+The paper's §8 active-learning use case generalized: a *round* is an
+assignment whose tasks carry the current global model as Parameters
+(exactly the paper's "distribute a model to many clients" example);
+each vehicle client trains locally in its task container and publishes a
+(compressed) model delta as a result; the server aggregates whatever
+arrived by the deadline (stragglers simply miss the round — state-based
+sync means their results surface later and are ignored by round id).
+
+This file holds the pure-JAX math (local SGD, FedAvg aggregation); the
+orchestration lives in repro.fleet.rounds (platform-driven) and the
+runnable demo in examples/federated_fleet.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.fleet.compression import (
+    ErrorFeedback,
+    flatten_pytree,
+    make_codec,
+    unflatten_pytree,
+)
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    rounds: int = 5
+    local_steps: int = 4
+    local_lr: float = 0.1
+    server_lr: float = 1.0
+    codec: str = "int8"  # none | int8 | topk
+    codec_kwargs: tuple = ()
+    deadline_fraction: float = 1.0  # fraction of clients awaited per round
+
+
+def local_sgd(
+    loss_fn: Callable[[Params, Any], jax.Array],
+    params: Params,
+    batch: Any,
+    *,
+    steps: int,
+    lr: float,
+) -> Params:
+    """Plain local SGD (FedAvg's client optimizer)."""
+
+    grad = jax.grad(loss_fn)
+
+    def one(p, _):
+        g = grad(p, batch)
+        return jax.tree.map(lambda w, gw: w - lr * gw, p, g), None
+
+    out, _ = jax.lax.scan(one, params, None, length=steps)
+    return out
+
+
+def client_delta(
+    loss_fn, params: Params, batch: Any, cfg: FedConfig, ef: ErrorFeedback | None
+) -> dict[str, Any]:
+    """Run local training, return the (optionally compressed) delta msg."""
+    new_params = local_sgd(
+        loss_fn, params, batch, steps=cfg.local_steps, lr=cfg.local_lr
+    )
+    delta = jax.tree.map(lambda a, b: a - b, new_params, params)
+    flat, treedef, shapes = flatten_pytree(delta)
+    if ef is None:
+        codec = make_codec(cfg.codec, **dict(cfg.codec_kwargs))
+        msg = codec.encode(flat)
+    else:
+        msg = ef.compress(flat)
+    return {"msg": msg, "treedef": treedef, "shapes": shapes}
+
+
+def aggregate_deltas(
+    params: Params,
+    deltas: list[dict[str, Any]],
+    cfg: FedConfig,
+    weights: list[float] | None = None,
+) -> Params:
+    """FedAvg: weighted mean of decoded deltas applied at server_lr."""
+    if not deltas:
+        return params
+    codec = make_codec(cfg.codec, **dict(cfg.codec_kwargs))
+    weights = weights or [1.0] * len(deltas)
+    total = sum(weights)
+    flat_sum = None
+    td, shp = deltas[0]["treedef"], deltas[0]["shapes"]
+    for d, w in zip(deltas, weights):
+        flat = codec.decode(d["msg"]) * (w / total)
+        flat_sum = flat if flat_sum is None else flat_sum + flat
+    mean_delta = unflatten_pytree(flat_sum, td, shp)
+    return jax.tree.map(
+        lambda p, g: (p + cfg.server_lr * g).astype(p.dtype), params, mean_delta
+    )
+
+
+# --------------------------------------------------------------------- #
+# secure-aggregation-style pairwise masking (paper §3.5 privacy)         #
+# --------------------------------------------------------------------- #
+def pairwise_masks(
+    n_clients: int, dim: int, seed: int
+) -> list[jax.Array]:
+    """Zero-sum masks: client i adds sum_j!=i s_ij where s_ij = -s_ji.
+    The server learns only the sum of deltas, not any individual one.
+    (Single-round, no-dropout variant — dropout recovery would need key
+    shares, out of scope; documented in DESIGN.md.)"""
+    masks = [jnp.zeros((dim,), jnp.float32) for _ in range(n_clients)]
+    for i in range(n_clients):
+        for j in range(i + 1, n_clients):
+            key = jax.random.PRNGKey(seed * 1_000_003 + i * 1_009 + j)
+            s = jax.random.normal(key, (dim,), jnp.float32) * 0.01
+            masks[i] = masks[i] + s
+            masks[j] = masks[j] - s
+    return masks

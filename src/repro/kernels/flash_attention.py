@@ -1,0 +1,176 @@
+"""Pallas TPU flash attention (GQA, causal, sliding-window).
+
+TPU-native blocking:
+* grid = (B, KV, nq, nk); the first three dims are parallel, the kv dim is
+  `arbitrary` (sequential) — running (m, l, acc) state lives in VMEM
+  scratch and is carried across kv steps, exactly the online-softmax
+  recurrence of repro.models.attention.flash_attention (the XLA twin).
+* BlockSpecs tile q/k/v into VMEM: q block (G, bq, D), kv blocks (bk, D) —
+  bq/bk default 128/256, multiples of the 8x128 VPU tile and the MXU edge.
+* Fully-masked (q_block, kv_block) pairs are skipped with pl.when — on
+  causal layouts that's the classic ~2x saving over dense scores; windowed
+  layouts skip everything outside the band.
+* All softmax math in f32; inputs may be bf16.
+
+head_dim is used as-is (120 for danube lands on padded lanes — wasteful
+but correct; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, 1, G, bq, D)
+    k_ref,  # (1, 1, bk, D)
+    v_ref,  # (1, 1, bk, D)
+    o_ref,  # (1, 1, G, bq, D)
+    m_scr,  # (G, bq) f32
+    l_scr,  # (G, bq) f32
+    acc_scr,  # (G, bq, D) f32
+    *,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    block_q: int,
+    block_k: int,
+    n_k: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # A (q_block, kv_block) pair is live unless the whole block is masked.
+    live = True
+    if causal:
+        live = jnp.logical_and(live, q_start + block_q - 1 >= k_start)
+    if window is not None:
+        live = jnp.logical_and(live, q_start - (k_start + block_k - 1) < window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q,
+            k,
+            (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (G, bq, bk)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask[None], s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[..., None] + jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[..., None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+    nq, nk = S // block_q, S // block_k
+
+    qg = q.reshape(B, S, KV, G, D).transpose(0, 2, 3, 1, 4)  # (B,KV,G,S,D)
+    kg = k.transpose(0, 2, 1, 3)  # (B,KV,S,D)
+    vg = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        n_k=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, nq, nk),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, G, block_q, D), lambda b, h, qi, ki: (b, h, 0, qi, 0)
+            ),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, G, block_q, D), lambda b, h, qi, ki: (b, h, 0, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, S, D), q.dtype),
+        scratch_shapes=[
+            _vmem((G, block_q), jnp.float32),
+            _vmem((G, block_q), jnp.float32),
+            _vmem((G, block_q, D), jnp.float32),
+        ],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(qg, kg, vg)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, D)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def _compiler_params():
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+        )
+    except Exception:  # pragma: no cover — older API fallbacks
+        return None

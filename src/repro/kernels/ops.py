@@ -1,0 +1,38 @@
+"""jit'd public wrappers over the Pallas kernels with automatic backend
+dispatch: TPU -> compiled kernels, anything else -> interpret mode (tests)
+or the pure-JAX twins (production CPU paths use repro.models.attention)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import quantize as _q
+from repro.kernels import ssm_scan as _scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, block_q=128, block_k=256):
+    return _fa.flash_attention(
+        q, k, v,
+        causal=causal, window=window,
+        block_q=block_q, block_k=block_k,
+        interpret=not _on_tpu(),
+    )
+
+
+def ssm_scan(dt, Bm, Cm, x, A, *, block_inner=512, chunk=128):
+    return _scan.ssm_scan(
+        dt, Bm, Cm, x, A,
+        block_inner=block_inner, chunk=chunk,
+        interpret=not _on_tpu(),
+    )
+
+
+def quantize_int8(x, *, block_rows=256):
+    return _q.quantize_int8(x, block_rows=block_rows, interpret=not _on_tpu())
+
+
+dequantize_int8 = _q.dequantize_int8

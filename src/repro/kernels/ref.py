@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the
+interpret-mode sweeps in tests/test_kernels.py assert against)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Materializing softmax attention with GQA + causal/window masks."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = (q.astype(jnp.float32) * scale).reshape(B, S, KV, G, D)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, k.astype(jnp.float32))
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= i >= j
+    if window is not None:
+        mask &= (i - j) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def ssm_scan_ref(
+    dt: jax.Array,  # (B, S, inner) f32
+    Bm: jax.Array,  # (B, S, state) f32
+    Cm: jax.Array,  # (B, S, state) f32
+    x: jax.Array,  # (B, S, inner)
+    A: jax.Array,  # (inner, state) f32, negative
+    h0: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential selective-scan recurrence (the literal definition)."""
+    B, S, inner = dt.shape
+    state = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, inner, state), jnp.float32)
+
+    def step(h, t):
+        Abar = jnp.exp(dt[:, t][..., None] * A[None])  # (B, inner, state)
+        Bx = (dt[:, t] * x[:, t].astype(jnp.float32))[..., None] * Bm[:, t][
+            :, None, :
+        ]
+        h = Abar * h + Bx
+        y = jnp.einsum("bis,bs->bi", h, Cm[:, t])
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return ys.transpose(1, 0, 2), h  # (B, S, inner), (B, inner, state)
+
+
+def quantize_int8_ref(
+    x: jax.Array, *, axis: int = -1
+) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization (deterministic round-to-nearest)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(
+        jnp.int8
+    )
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8_ref(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale

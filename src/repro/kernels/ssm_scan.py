@@ -1,0 +1,116 @@
+"""Pallas TPU selective-scan (Mamba) kernel.
+
+TPU adaptation of the CUDA selective-scan: instead of warp-level parallel
+prefix sums, we block the *inner* (channel) dimension across the grid —
+channels are embarrassingly parallel in the SSM recurrence — and walk the
+sequence in VMEM-resident chunks, carrying the (bi, state) hidden state in
+scratch across chunk steps. Per time step the update is a fused
+elementwise+reduction over a (bi, state) tile, which maps onto the VPU's
+8x128 lanes; there is no matmul, so the MXU is untouched (the surrounding
+projections feed it instead).
+
+grid = (B, n_inner_blocks, n_chunks); last dim sequential (`arbitrary`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssm_kernel(
+    dt_ref,  # (1, chunk, bi)
+    b_ref,  # (1, chunk, state)
+    c_ref,  # (1, chunk, state)
+    x_ref,  # (1, chunk, bi)
+    a_ref,  # (bi, state)
+    y_ref,  # (1, chunk, bi)
+    h_scr,  # (bi, state) f32
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros(h_scr.shape, jnp.float32)
+
+    a = a_ref[...].astype(jnp.float32)  # (bi, state)
+
+    def step(t, h):
+        dt_t = dt_ref[0, t].astype(jnp.float32)  # (bi,)
+        x_t = x_ref[0, t].astype(jnp.float32)  # (bi,)
+        b_t = b_ref[0, t].astype(jnp.float32)  # (state,)
+        c_t = c_ref[0, t].astype(jnp.float32)  # (state,)
+        abar = jnp.exp(dt_t[:, None] * a)  # (bi, state)
+        bx = (dt_t * x_t)[:, None] * b_t[None, :]
+        h = abar * h + bx
+        y_ref[0, t] = jnp.sum(h * c_t[None, :], axis=-1).astype(y_ref.dtype)
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, chunk, step, h_scr[...])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_inner", "chunk", "interpret")
+)
+def ssm_scan(
+    dt: jax.Array,  # (B, S, inner) f32
+    Bm: jax.Array,  # (B, S, state) f32
+    Cm: jax.Array,  # (B, S, state) f32
+    x: jax.Array,  # (B, S, inner)
+    A: jax.Array,  # (inner, state) f32
+    *,
+    block_inner: int = 512,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns y (B, S, inner) f32. (Final state is recomputed by the
+    caller's prefill path when needed — the kernel serves the train path.)
+    """
+    B, S, inner = dt.shape
+    state = Bm.shape[-1]
+    block_inner = min(block_inner, inner)
+    chunk = min(chunk, S)
+    assert inner % block_inner == 0 and S % chunk == 0
+    nb, nc = inner // block_inner, S // chunk
+
+    kernel = functools.partial(_ssm_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(B, nb, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_inner), lambda b, ib, ci: (b, ci, ib)),
+            pl.BlockSpec((1, chunk, state), lambda b, ib, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, state), lambda b, ib, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, block_inner), lambda b, ib, ci: (b, ci, ib)),
+            pl.BlockSpec((block_inner, state), lambda b, ib, ci: (ib, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, chunk, block_inner), lambda b, ib, ci: (b, ci, ib)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, S, inner), jnp.float32),
+        scratch_shapes=[_vmem((block_inner, state), jnp.float32)],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(dt, Bm, Cm, x, A)
+    return y
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def _compiler_params():
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+    except Exception:  # pragma: no cover
+        return None

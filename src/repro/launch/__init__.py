@@ -1,0 +1,2 @@
+# NOTE: repro.launch.dryrun must be run as a script (it sets XLA_FLAGS);
+# do not import it here.

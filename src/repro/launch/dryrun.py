@@ -1,0 +1,482 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ----------------------------------------------------------------------- #
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+# extract the roofline terms from the compiled artifact.
+#
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init). Do not move them. Do not import this module
+# from tests — run it as a script: PYTHONPATH=src python -m repro.launch.dryrun
+# ----------------------------------------------------------------------- #
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.launch.mesh import HW, make_production_mesh  # noqa: E402
+from repro.models.model import (  # noqa: E402
+    ArchConfig,
+    cache_spec,
+    decode_step,
+    init_params,
+    prefill,
+    train_loss,
+)
+from repro.sharding import planner  # noqa: E402
+from repro.sharding.act import set_batch_axes, set_model_axis  # noqa: E402
+from repro.train.optimizer import OptimizerConfig, init_opt_state  # noqa: E402
+from repro.train.train_step import make_train_step  # noqa: E402
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+#: long_500k runs only for sub-quadratic-context archs (DESIGN.md §4).
+LONG_OK = {
+    "jamba-1.5-large-398b",  # hybrid: SSM state + 9 windowless attn layers
+    "gemma3-1b",  # 25/26 layers window-512; O(S) decode on globals
+    "h2o-danube-3-4b",  # SWA rolling cache
+    "mixtral-8x22b",  # SWA rolling cache (per assignment listing)
+    "xlstm-1.3b",  # pure recurrent state
+}
+
+
+def cells(archs=None, shapes=None):
+    for a in archs or ARCH_IDS:
+        for s in shapes or SHAPES:
+            if s == "long_500k" and a not in LONG_OK:
+                continue
+            yield a, s
+
+
+# ----------------------------------------------------------------------- #
+# input specs (ShapeDtypeStruct stand-ins, never allocated)               #
+# ----------------------------------------------------------------------- #
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """ShapeDtypeStructs for every model input of this (arch, shape)."""
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    i32 = jnp.int32
+    f = cfg.dtype
+    if sh["kind"] in ("train", "prefill"):
+        if cfg.uses_embedding_input:
+            batch = {
+                "frame_embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), f),
+                "labels": jax.ShapeDtypeStruct((B, S, cfg.n_codebooks), i32),
+            }
+        elif cfg.frontend == "vit_stub":
+            P_ = cfg.n_patches
+            batch = {
+                "patch_embeds": jax.ShapeDtypeStruct((B, P_, cfg.d_model), f),
+                "tokens": jax.ShapeDtypeStruct((B, S - P_), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        else:
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        if sh["kind"] == "prefill":
+            batch.pop("labels")
+        return {"batch": batch}
+    # decode
+    if cfg.uses_embedding_input:
+        batch = {"frame_embeds": jax.ShapeDtypeStruct((B, 1, cfg.d_model), f)}
+    else:
+        batch = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    cache = cache_spec(cfg, B, S)
+    return {"batch": batch, "cache": cache}
+
+
+def _opt_cfg(cfg: ArchConfig, n_params_bytes: float) -> OptimizerConfig:
+    big = n_params_bytes > 40e9  # >= ~20B params in bf16
+    return OptimizerConfig(moment_dtype="bfloat16" if big else "float32")
+
+
+# ----------------------------------------------------------------------- #
+# collective parsing                                                      #
+# ----------------------------------------------------------------------- #
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_COLL_RE = re.compile(
+    r"=\s+(\(?[^=]*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str, top_n: int = 0):
+    """Sum per-device output bytes of collective ops in the *partitioned*
+    module (shapes are already local). `-done` ops are skipped (their
+    `-start` twin carries the shape). With top_n, also return the largest
+    individual ops (the hillclimb profile)."""
+    out: dict[str, float] = {}
+    tops: list[tuple[float, str]] = []
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        ty, op = m.group(1), m.group(2)
+        b = _type_bytes(ty)
+        out[op] = out.get(op, 0.0) + b
+        if top_n:
+            tops.append((b, line.strip()[:240]))
+    out["total"] = sum(out.values())
+    if top_n:
+        tops.sort(key=lambda t: -t[0])
+        return out, [{"bytes": b, "op": l} for b, l in tops[:top_n]]
+    return out
+
+
+def sharded_bytes(shapes_tree, shardings_tree, mesh) -> float:
+    """Static per-device bytes for a pytree given its shardings."""
+    total = 0.0
+    for leaf, sh in zip(
+        jax.tree.leaves(shapes_tree), jax.tree.leaves(
+            shardings_tree, is_leaf=lambda x: hasattr(x, "spec")
+        )
+    ):
+        n = 1
+        for axes in sh.spec:
+            if axes is None:
+                continue
+            for a in (axes if isinstance(axes, tuple) else (axes,)):
+                n *= mesh.shape[a]
+        total += leaf.size * jnp.dtype(leaf.dtype).itemsize / n
+    return total
+
+
+# ----------------------------------------------------------------------- #
+# per-cell dry-run                                                        #
+# ----------------------------------------------------------------------- #
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    cfg: ArchConfig | None = None,
+    opt_cfg: OptimizerConfig | None = None,
+    light: bool = False,
+    fsdp: bool | None = None,
+) -> dict:
+    cfg = cfg if cfg is not None else get_config(arch)
+    sh = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # Activation pins (H3.2/H3.3) are needed exactly where propagation
+    # can go wrong: FSDP'd weights and MoE dispatch. Small dense train
+    # graphs are better left to propagation (measured: pins cost 5-30%
+    # there — EXPERIMENTS.md §Perf regressions note).
+    param_shapes_probe = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0)
+    )
+    pbytes_probe = sum(
+        x.size * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree.leaves(param_shapes_probe)
+    )
+    fsdp_like = (fsdp is True) or pbytes_probe > 4e9 * mesh.shape["model"]
+    pin = sh["kind"] != "train" or fsdp_like or cfg.moe_experts > 0
+    set_batch_axes((("pod", "data") if multi_pod else ("data",)) if pin else None)
+    set_model_axis("model", mesh.shape["model"])
+    n_dev = mesh.size
+    t0 = time.time()
+
+    param_shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    param_bytes_global = sum(
+        x.size * jnp.dtype(x.dtype).itemsize for x in jax.tree.leaves(param_shapes)
+    )
+    specs = input_specs(cfg, shape_name)
+    result: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": sh["kind"],
+        "devices": n_dev,
+        "param_bytes_global": param_bytes_global,
+    }
+
+    if sh["kind"] == "train":
+        opt_cfg = opt_cfg or _opt_cfg(cfg, param_bytes_global)
+        state_shapes = {
+            "params": param_shapes,
+            "opt": jax.eval_shape(
+                lambda p: init_opt_state(opt_cfg, p), param_shapes
+            ),
+        }
+        param_sh = planner.param_shardings(cfg, param_shapes, mesh, fsdp=fsdp)
+        state_sh = {
+            "params": param_sh,
+            "opt": {
+                "m": jax.tree.map(lambda s: s, param_sh),
+                "v": jax.tree.map(lambda s: s, param_sh),
+                "step": planner.replicated(mesh),
+            },
+        }
+        batch_sh = planner.batch_shardings(specs["batch"], mesh)
+        step_fn = make_train_step(cfg, opt_cfg)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+        )
+        with mesh:
+            lowered = jitted.lower(state_shapes, specs["batch"])
+        result["static_bytes_per_device"] = sharded_bytes(
+            jax.tree.leaves(state_shapes), jax.tree.leaves(state_sh), mesh
+        )
+    elif sh["kind"] == "prefill":
+        param_sh = planner.param_shardings(cfg, param_shapes, mesh, serve=True)
+        batch_sh = planner.batch_shardings(specs["batch"], mesh)
+        fn = lambda p, b: prefill(p, cfg, b, cache_len=sh["seq"])
+        jitted = jax.jit(fn, in_shardings=(param_sh, batch_sh))
+        with mesh:
+            lowered = jitted.lower(param_shapes, specs["batch"])
+        result["static_bytes_per_device"] = sharded_bytes(
+            param_shapes, param_sh, mesh
+        )
+    else:  # decode
+        param_sh = planner.param_shardings(cfg, param_shapes, mesh, serve=True)
+        # wide-serve archs spend the data axis on weight storage; the
+        # decode batch is then replicated (activations are B x 1 x d)
+        wide = param_bytes_global > 8e9 * mesh.shape["model"]
+        batch_sh = planner.batch_shardings(
+            specs["batch"], mesh, replicate=wide
+        )
+        cache_sh = planner.cache_shardings(cfg, specs["cache"], mesh)
+        fn = lambda p, b, c: decode_step(p, cfg, b, c)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(param_sh, batch_sh, cache_sh),
+            out_shardings=(None, cache_sh),
+        )
+        with mesh:
+            lowered = jitted.lower(param_shapes, specs["batch"], specs["cache"])
+        result["static_bytes_per_device"] = sharded_bytes(
+            param_shapes, param_sh, mesh
+        ) + sharded_bytes(specs["cache"], cache_sh, mesh)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    # --- analyses ------------------------------------------------------ #
+    try:
+        if light:
+            raise RuntimeError("light probe: skip memory analysis")
+        mem = compiled.memory_analysis()
+        result["memory_analysis"] = {
+            k: getattr(mem, k)
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        }
+    except Exception as e:  # CPU backend may not implement it
+        result["memory_analysis"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        result["flops_per_device"] = float(cost.get("flops", -1))
+        result["bytes_per_device"] = float(cost.get("bytes accessed", -1))
+    except Exception as e:
+        result["flops_per_device"] = -1.0
+        result["bytes_per_device"] = -1.0
+        result["cost_error"] = str(e)
+
+    hlo = compiled.as_text()
+    result["collectives"], result["top_collectives"] = collective_bytes(
+        hlo, top_n=12
+    )
+    result["hlo_len"] = len(hlo)
+
+    # --- roofline terms ------------------------------------------------ #
+    f = result["flops_per_device"]
+    b = result["bytes_per_device"]
+    c = result["collectives"]["total"]
+    result["roofline"] = {
+        "compute_s": f / HW["peak_flops_bf16"] if f > 0 else None,
+        "memory_s": b / HW["hbm_bandwidth"] if b > 0 else None,
+        "collective_s": c / HW["ici_bandwidth"],
+    }
+    terms = {
+        k: v
+        for k, v in zip(
+            ("compute", "memory", "collective"),
+            (
+                result["roofline"]["compute_s"],
+                result["roofline"]["memory_s"],
+                result["roofline"]["collective_s"],
+            ),
+        )
+        if v is not None
+    }
+    result["bottleneck"] = max(terms, key=terms.get) if terms else "unknown"
+    result["lower_s"] = round(t_lower, 1)
+    result["compile_s"] = round(t_compile, 1)
+    return result
+
+
+def _strip_groups(cfg: ArchConfig, keep: int | None) -> ArchConfig:
+    """Variant with no layer groups (keep=None) or exactly one pattern
+    block of group `keep` (repeats=1) — the probes for scan-aware cost
+    accounting (XLA cost_analysis counts while bodies ONCE; see
+    EXPERIMENTS.md §Methodology)."""
+    import dataclasses
+
+    if keep is None:
+        groups = ()
+    else:
+        pattern, _ = cfg.groups[keep]
+        groups = ((pattern, 1),)
+    return dataclasses.replace(cfg, groups=groups)
+
+
+def run_cell_corrected(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    cfg_transform=None,
+) -> dict:
+    """Full compile (validation + memory) + probe compiles for
+    trip-count-corrected FLOPs/bytes/collective accounting.
+    cfg_transform(cfg) -> cfg lets the perf hillclimb lower variants."""
+    cfg = get_config(arch)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+    param_shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0)
+    )
+    pbytes = sum(
+        x.size * jnp.dtype(x.dtype).itemsize for x in jax.tree.leaves(param_shapes)
+    )
+    opt_cfg = _opt_cfg(cfg, pbytes)
+    fsdp = pbytes > 4e9 * 16  # decided on the FULL model; probes inherit
+
+    full = run_cell(
+        arch, shape_name, multi_pod=multi_pod, cfg=cfg, opt_cfg=opt_cfg,
+        fsdp=fsdp,
+    )
+    base = run_cell(
+        arch, shape_name, multi_pod=multi_pod,
+        cfg=_strip_groups(cfg, None), opt_cfg=opt_cfg, light=True, fsdp=fsdp,
+    )
+
+    def get(res):
+        return (
+            max(res["flops_per_device"], 0.0),
+            max(res["bytes_per_device"], 0.0),
+            res["collectives"]["total"],
+        )
+
+    bf, bb, bc = get(base)
+    cf, cb, cc = bf, bb, bc
+    for gi, (pattern, repeats) in enumerate(cfg.groups):
+        probe = run_cell(
+            arch, shape_name, multi_pod=multi_pod,
+            cfg=_strip_groups(cfg, gi), opt_cfg=opt_cfg, light=True, fsdp=fsdp,
+        )
+        pf, pb, pc = get(probe)
+        cf += repeats * max(pf - bf, 0.0)
+        cb += repeats * max(pb - bb, 0.0)
+        cc += repeats * max(pc - bc, 0.0)
+
+    full["corrected"] = {
+        "flops_per_device": cf,
+        "bytes_per_device": cb,
+        "collective_bytes": cc,
+        "method": "base+sum(R_g x body_g); probes compiled per group",
+    }
+    full["roofline_corrected"] = {
+        "compute_s": cf / HW["peak_flops_bf16"],
+        "memory_s": cb / HW["hbm_bandwidth"],
+        "collective_s": cc / HW["ici_bandwidth"],
+    }
+    terms = full["roofline_corrected"]
+    full["bottleneck_corrected"] = max(
+        ("compute", "memory", "collective"),
+        key=lambda k: terms[f"{k}_s"],
+    )
+    return full
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch, shape in cells(args.arch, args.shape):
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+            path = outdir / f"{tag}.json"
+            if path.exists() and not args.force:
+                print(f"[skip] {tag} (cached)")
+                continue
+            print(f"[run ] {tag} ...", flush=True)
+            try:
+                t0 = time.time()
+                res = run_cell_corrected(arch, shape, multi_pod=mp)
+                path.write_text(json.dumps(res, indent=2))
+                rt = res["roofline_corrected"]
+                print(
+                    f"[ ok ] {tag}  {time.time()-t0:6.1f}s  "
+                    f"compute={rt['compute_s']:.4g}  memory={rt['memory_s']:.4g}  "
+                    f"collective={rt['collective_s']:.4g}  "
+                    f"bottleneck={res['bottleneck_corrected']}",
+                    flush=True,
+                )
+            except Exception:
+                failures.append(tag)
+                err = traceback.format_exc()
+                (outdir / f"{tag}.FAILED").write_text(err)
+                print(f"[FAIL] {tag}\n{err}", flush=True)
+
+    print(f"\ndone; {len(failures)} failures: {failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

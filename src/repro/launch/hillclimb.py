@@ -1,0 +1,76 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512"
+    + os.environ.get("EXTRA_XLA_FLAGS", "")
+)
+
+# ----------------------------------------------------------------------- #
+# Perf hillclimb driver: lower a named variant of a (arch, shape) cell and
+# record its corrected roofline terms next to the baseline.
+#
+#   PYTHONPATH=src python -m repro.launch.hillclimb \
+#       --arch granite-8b --shape prefill_32k --variant gqa_repeat
+#
+# Variants are code-level knobs (ArchConfig fields / planner policy); the
+# iteration log lives in EXPERIMENTS.md §Perf.
+# ----------------------------------------------------------------------- #
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+from repro.launch.dryrun import run_cell_corrected  # noqa: E402
+
+VARIANTS = {
+    "baseline": lambda cfg: cfg,
+    "gqa_repeat": lambda cfg: dataclasses.replace(cfg, gqa_repeat=True),
+    "mamba_chunk64": lambda cfg: dataclasses.replace(cfg, mamba_chunk=64),
+    "mamba_chunk256": lambda cfg: dataclasses.replace(cfg, mamba_chunk=256),
+    "loss_chunk2k": lambda cfg: dataclasses.replace(cfg, loss_chunk=2048),
+    "attn_block_1k": lambda cfg: dataclasses.replace(
+        cfg, attn_q_block=1024, attn_kv_block=1024
+    ),
+    "gqa_repeat+attn1k": lambda cfg: dataclasses.replace(
+        cfg, gqa_repeat=True, attn_q_block=1024, attn_kv_block=1024
+    ),
+    "mamba_bf16": lambda cfg: dataclasses.replace(
+        cfg, mamba_scan_dtype="bfloat16"
+    ),
+    "mamba_bf16+gqa": lambda cfg: dataclasses.replace(
+        cfg, mamba_scan_dtype="bfloat16", gqa_repeat=True
+    ),
+    "mamba_bf16+gqa+chunk256": lambda cfg: dataclasses.replace(
+        cfg, mamba_scan_dtype="bfloat16", gqa_repeat=True, mamba_chunk=256
+    ),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True, choices=sorted(VARIANTS))
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    res = run_cell_corrected(
+        args.arch, args.shape, cfg_transform=VARIANTS[args.variant]
+    )
+    res["variant"] = args.variant
+    tag = f"{args.arch}__{args.shape}__{args.variant}"
+    (outdir / f"{tag}.json").write_text(json.dumps(res, indent=2))
+    rt = res["roofline_corrected"]
+    print(
+        f"{tag}: compute={rt['compute_s']:.4g} memory={rt['memory_s']:.4g} "
+        f"collective={rt['collective_s']:.4g} "
+        f"bottleneck={res['bottleneck_corrected']}"
+    )
+    for t in res.get("top_collectives", [])[:6]:
+        print(f"  {t['bytes']/1e6:10.1f} MB  {t['op'][:150]}")
+
+
+if __name__ == "__main__":
+    main()

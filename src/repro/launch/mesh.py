@@ -1,0 +1,40 @@
+"""Production mesh builders.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before the first device
+query; tests must see the single real CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    The `pod` axis composes with `data` for the batch dimension (pure DP
+    across pods: cross-pod traffic is gradient all-reduce only — the right
+    default when inter-pod links are DCN-class).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke tests and examples."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+# TPU v5e hardware model used by the roofline analysis (per chip).
+HW = {
+    "peak_flops_bf16": 197e12,  # FLOP/s
+    "hbm_bandwidth": 819e9,  # B/s
+    "ici_bandwidth": 50e9,  # B/s per link
+    "hbm_bytes": 16e9,
+}

@@ -1,0 +1,194 @@
+"""End-to-end training driver, coordinated by the AutoSPADA control plane.
+
+Every pod-host is a platform *client*; the training job is an
+*assignment* whose per-host task exists for the job's lifetime; progress
+(steps, losses) and checkpoints flow through the result path with the
+paper's cache-until-acknowledged durability. Preemption is survived by
+construction: rebuild the host's EdgeClient over the same LocalDisk, ask
+the CheckpointManager for the latest acknowledged step, resume.
+
+On real hardware this runs one process per host over the production mesh
+(launch with --mesh prod under `jax.distributed`); on CPU it runs the same
+code on the host mesh with a reduced config — which is exactly what
+examples/train_lm.py demonstrates, including a mid-run simulated
+preemption.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_tiny
+from repro.core import EdgeClient, LocalDisk, User, make_platform
+from repro.data.pipeline import synthetic_batch
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.model import init_params
+from repro.sharding import planner
+from repro.train.checkpoint import BlobStore, CheckpointManager
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+#: The per-host job task: a long-running (indefinite, paper §4.1.1)
+#: payload that heartbeats until canceled; the real work happens in the
+#: host process — the task is the job's platform identity (lifecycle,
+#: results channel, cancellation point). It must stay ACTIVE for the
+#: duration: the server ignores results for non-active tasks.
+JOB_PAYLOAD = """
+import autospada
+autospada.publish({"kind": "job-started"})
+while True:
+    autospada.sleep(0.05)
+"""
+
+
+class TrainRun:
+    """One host's view of a platform-coordinated training job."""
+
+    def __init__(
+        self,
+        arch: str,
+        *,
+        tiny: bool = True,
+        workdir: str = "experiments/trainrun",
+        mesh: str = "host",
+        batch: int = 8,
+        seq: int = 128,
+        seed: int = 0,
+        platform=None,  # (store, broker, server) to share across restarts
+        disk: LocalDisk | None = None,
+        task_id: str | None = None,
+    ):
+        self.cfg = get_tiny(arch) if tiny else get_config(arch)
+        self.batch, self.seq, self.seed = batch, seq, seed
+        self.mesh = (
+            make_host_mesh() if mesh == "host" else make_production_mesh()
+        )
+        self.opt_cfg = OptimizerConfig(
+            learning_rate=1e-3, warmup_steps=20, moment_dtype="float32"
+        )
+        self.store, self.broker, self.server = (
+            platform if platform else self._fresh_platform()
+        )
+        self.disk = disk if disk is not None else LocalDisk()
+        self.host = EdgeClient(
+            "pod-host-0",
+            self.server,
+            self.broker,
+            disk=self.disk,
+            thread_containers=True,  # the job heartbeat must not block
+        )
+        self.host.bootstrap()
+        self.host.run_until_idle()
+        self.blobs = BlobStore(Path(workdir) / "blobs")
+        self.task_id = task_id or self._create_job()
+        self.ckpt = CheckpointManager(self.blobs, self.host, self.task_id)
+        self._step_fn = None
+
+    def _fresh_platform(self):
+        store, broker, (server,) = make_platform()
+        return store, broker, server
+
+    def _create_job(self) -> str:
+        user = User(self.server, self.broker)
+        payload = user.payload(JOB_PAYLOAD, name="train-job")
+        assign = user.assignment(
+            "train", [user.task("pod-host-0", payload)]
+        ).commit()
+        self.host.run_until_idle()
+        return assign.tasks[0].task_id
+
+    # ------------------------------------------------------------------ #
+    def _build_step(self):
+        if self._step_fn is None:
+            state_sh = None  # host mesh: let jit place things
+            self._step_fn = jax.jit(make_train_step(self.cfg, self.opt_cfg))
+        return self._step_fn
+
+    def init_or_restore(self) -> tuple[dict[str, Any], int]:
+        got = self.ckpt.latest(self.server)
+        if got is not None:
+            step, state = got
+            state = jax.tree.map(jax.numpy.asarray, state)
+            return state, step
+        params = init_params(self.cfg, jax.random.PRNGKey(self.seed))
+        return {
+            "params": params,
+            "opt": init_opt_state(self.opt_cfg, params),
+        }, 0
+
+    def run(
+        self,
+        n_steps: int,
+        *,
+        ckpt_every: int = 20,
+        log_every: int = 10,
+        preempt_at: int | None = None,
+    ) -> list[dict[str, float]]:
+        """Train; optionally raise a simulated preemption at `preempt_at`."""
+        step_fn = self._build_step()
+        state, start = self.init_or_restore()
+        logs = []
+        with self.mesh:
+            for step in range(start, n_steps):
+                if preempt_at is not None and step == preempt_at:
+                    raise Preempted(step)
+                batch = synthetic_batch(
+                    self.cfg,
+                    batch=self.batch,
+                    seq=self.seq,
+                    seed=self.seed,
+                    step=step,
+                )
+                t0 = time.time()
+                state, metrics = step_fn(state, batch)
+                loss = float(metrics["loss"])
+                if (step + 1) % log_every == 0 or step == start:
+                    rec = {
+                        "step": step + 1,
+                        "loss": loss,
+                        "sec": time.time() - t0,
+                    }
+                    logs.append(rec)
+                    self.host._on_container_event(
+                        self.task_id, result_value={"kind": "metrics", **rec}
+                    )
+                    self.host.run_until_idle()
+                if (step + 1) % ckpt_every == 0 or step + 1 == n_steps:
+                    self.ckpt.save(step + 1, jax.tree.map(np.asarray, state))
+        return logs
+
+
+class Preempted(Exception):
+    def __init__(self, step: int):
+        super().__init__(f"simulated preemption at step {step}")
+        self.step = step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true", help="full (non-tiny) config")
+    ap.add_argument("--workdir", default="experiments/trainrun")
+    args = ap.parse_args()
+    run = TrainRun(
+        args.arch,
+        tiny=not args.full,
+        workdir=args.workdir,
+        batch=args.batch,
+        seq=args.seq,
+    )
+    logs = run.run(args.steps)
+    for rec in logs:
+        print(rec)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Model substrate: composable decoder architectures in pure JAX."""
+from repro.models.model import (
+    ArchConfig,
+    LayerSpec,
+    cache_spec,
+    decode_step,
+    init_cache,
+    init_params,
+    model_flops_per_token,
+    param_count,
+    prefill,
+    tiny_variant,
+    train_loss,
+)
+
+__all__ = [
+    "ArchConfig", "LayerSpec", "cache_spec", "decode_step", "init_cache",
+    "init_params", "model_flops_per_token", "param_count", "prefill",
+    "tiny_variant", "train_loss",
+]

@@ -1,0 +1,390 @@
+"""Attention: chunked online-softmax ("flash") in pure JAX + decode paths.
+
+Three execution regimes:
+
+* ``flash_attention`` — train/prefill, full (global) causal attention.
+  Blocked over q and kv with a running (max, sum, acc) carry, so the
+  (S, S) score matrix never materializes — same algorithm as the Pallas
+  kernel in ``repro.kernels.flash_attention`` (which is the TPU-target
+  twin; this is the XLA path used for dry-runs and as the oracle).
+* ``local_attention`` — train/prefill, sliding-window attention computed
+  block-locally: with block size = window, every query attends to its own
+  block plus the previous one under an exact (g_q - g_k) < window mask.
+  FLOPs are O(S * 2W) instead of O(S^2).
+* ``decode_attention`` — single-token decode against a (possibly rolling)
+  KV cache.
+
+GQA throughout: H query heads grouped over KV heads (H = KV * G).
+All softmax math in f32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, apply_rope, dense_init, linear, rms_norm
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- #
+# parameter init                                                        #
+# --------------------------------------------------------------------- #
+def attention_init(
+    key,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    dtype,
+    qk_norm: bool = False,
+) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(k1, d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(k2, d_model, n_kv_heads * head_dim, dtype),
+        "wv": dense_init(k3, d_model, n_kv_heads * head_dim, dtype),
+        "wo": dense_init(k4, n_heads * head_dim, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.zeros((head_dim,), jnp.float32)
+        p["k_norm"] = jnp.zeros((head_dim,), jnp.float32)
+    return p
+
+
+# --------------------------------------------------------------------- #
+# core blocked attention                                                #
+# --------------------------------------------------------------------- #
+def _gqa_scores(q, k):
+    """q: (B, T, KV, G, D), k: (B, Skv, KV, D) -> (B, KV, G, T, Skv), f32."""
+    return jnp.einsum(
+        "btkgd,bskd->bkgts", q, k, preferred_element_type=jnp.float32
+    )
+
+
+def _gqa_out(p, v):
+    """p: (B, KV, G, T, Skv) f32, v: (B, Skv, KV, D) -> (B, T, KV, G, D)."""
+    return jnp.einsum(
+        "bkgts,bskd->btkgd", p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+
+
+def flash_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,  # (B, S, KV, D)
+    *,
+    causal: bool = True,
+    q_block: int = 512,
+    kv_block: int = 512,
+    scale: float | None = None,
+) -> jax.Array:
+    """Blocked online-softmax attention. Returns (B, S, H, D)."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, S)
+    S_orig = S
+    lcm = q_block * kv_block // math.gcd(q_block, kv_block)
+    if S % lcm:  # ragged tail: pad; padded keys are causally masked out
+        pad = lcm - S % lcm
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S += pad
+    nq, nk = S // q_block, S // kv_block
+
+    qb = (q * scale).reshape(B, nq, q_block, KV, G, D)
+    kb = k.reshape(B, nk, kv_block, KV, D)
+    vb = v.reshape(B, nk, kv_block, KV, D)
+
+    q_pos = jnp.arange(S).reshape(nq, q_block)
+    k_pos = jnp.arange(S).reshape(nk, kv_block)
+
+    def q_step(_, qi):
+        q_i = qb[:, qi]  # (B, bq, KV, G, D)
+        qp = q_pos[qi]  # (bq,)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            k_i, v_i = kb[:, ki], vb[:, ki]
+            s = _gqa_scores(q_i, k_i)  # (B, KV, G, bq, bk) f32
+            if causal:
+                mask = qp[:, None] >= k_pos[ki][None, :]  # (bq, bk)
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgts,bskd->bkgtd",
+                p.astype(v_i.dtype),
+                v_i,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_block, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, KV, G, bq, D)
+        return None, out.transpose(0, 3, 1, 2, 4)  # (B, bq, KV, G, D)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))  # (nq, B, bq, KV, G, D)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, D)[:, :S_orig]
+    return out.astype(q.dtype)
+
+
+def local_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int,
+    q_block: int = 256,
+    scale: float | None = None,
+) -> jax.Array:
+    """Exact causal sliding-window attention, banded-block formulation.
+
+    Scans over q blocks; each q block attends only the `window//bq + 1`
+    kv blocks that can fall inside its band, fetched with a clamped
+    dynamic slice, under an exact (0 <= g_q - g_k < window) mask.
+    FLOPs O(S * (window + bq)); peak score memory O(bq * (window + bq)).
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    w = min(window, S)
+    bq = min(q_block, w)
+    if w % bq:
+        bq = math.gcd(w, bq) or w
+    S_orig = S
+    if S % bq:  # ragged tail: pad; padded keys are causally masked out
+        pad = bq - S % bq
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S += pad
+    assert S % bq == 0 and w % bq == 0, (S, w, bq)
+    nq = S // bq
+    wb = w // bq  # kv blocks strictly before the diagonal that can matter
+    span = (wb + 1) * bq  # keys visible to one q block (band + diagonal)
+
+    qb = (q * scale).reshape(B, nq, bq, KV, G, D)
+    kb = k.reshape(B, nq, bq, KV, D)
+    vb = v.reshape(B, nq, bq, KV, D)
+
+    def q_step(_, qi):
+        q_i = qb[:, qi]  # (B, bq, KV, G, D)
+        start = jnp.clip(qi - wb, 0, nq - (wb + 1))
+        k_band = jax.lax.dynamic_slice_in_dim(kb, start, wb + 1, axis=1)
+        v_band = jax.lax.dynamic_slice_in_dim(vb, start, wb + 1, axis=1)
+        k_band = k_band.reshape(B, span, KV, D)
+        v_band = v_band.reshape(B, span, KV, D)
+        s = _gqa_scores(q_i, k_band)  # (B, KV, G, bq, span) f32
+        q_pos = qi * bq + jnp.arange(bq)  # global query positions
+        k_pos = start * bq + jnp.arange(span)
+        delta = q_pos[:, None] - k_pos[None, :]
+        mask = (delta >= 0) & (delta < w)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = _gqa_out(p, v_band)  # (B, bq, KV, G, D)
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))  # (nq, B, bq, ...)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, D)[:, :S_orig]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, Smax, KV, D)
+    v_cache: jax.Array,
+    *,
+    valid_len: jax.Array | int,  # number of valid cache entries (rolling => Smax)
+    scale: float | None = None,
+) -> jax.Array:
+    """One-token attention against a cache. Masks positions >= valid_len."""
+    B, _, H, D = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = (q * scale).reshape(B, 1, KV, G, D)
+    s = jnp.einsum(
+        "btkgd,bskd->bkgts", qg, k_cache, preferred_element_type=jnp.float32
+    )  # (B, KV, G, 1, Smax)
+    Smax = k_cache.shape[1]
+    valid = jnp.arange(Smax) < valid_len
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = jnp.einsum(
+        "bkgts,bskd->btkgd",
+        p.astype(v_cache.dtype),
+        v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- #
+# full attention layer (projections + rope + core)                      #
+# --------------------------------------------------------------------- #
+def repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, KV, D) -> (B, S, H, D): materialized GQA repeat, so every
+    attention einsum runs with a model-axis-shardable head dimension."""
+    B, S, KV, D = k.shape
+    G = n_heads // KV
+    return jnp.repeat(k, G, axis=2)
+
+
+def attention_apply(
+    params: Params,
+    x: jax.Array,  # (B, S, d)
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    positions: jax.Array,  # (B, S) or (S,)
+    rope_theta: float,
+    window: int | None = None,
+    attn_impl: Any = None,  # pluggable kernel (e.g. pallas wrapper)
+    q_block: int = 512,
+    kv_block: int = 512,
+    gqa_repeat: bool = False,
+) -> jax.Array:
+    B, S, d = x.shape
+    q = linear(x, params["wq"]).reshape(B, S, n_heads, head_dim)
+    k = linear(x, params["wk"]).reshape(B, S, n_kv_heads, head_dim)
+    v = linear(x, params["wv"]).reshape(B, S, n_kv_heads, head_dim)
+    if gqa_repeat and n_kv_heads < n_heads:
+        k = repeat_kv(k, n_heads)
+        v = repeat_kv(v, n_heads)
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    if rope_theta:  # theta == 0 => no positional encoding (e.g. jamba)
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    if attn_impl is not None:
+        out = attn_impl(q, k, v, window=window)
+    elif window is not None and window < S:
+        out = local_attention(q, k, v, window=window)
+    else:
+        out = flash_attention(q, k, v, causal=True, q_block=q_block, kv_block=kv_block)
+    return linear(out.reshape(B, S, n_heads * head_dim), params["wo"])
+
+
+def attention_prefill(
+    params: Params,
+    x: jax.Array,
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    positions: jax.Array,
+    rope_theta: float,
+    window: int | None,
+    cache_len: int,
+    gqa_repeat: bool = False,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Prefill: same as apply, but also returns the KV cache (already laid
+    out for decode: rolling if windowed, padded to cache_len otherwise —
+    always in KV-head layout; gqa_repeat affects compute only)."""
+    B, S, d = x.shape
+    out = attention_apply(
+        params,
+        x,
+        n_heads=n_heads,
+        n_kv_heads=n_kv_heads,
+        head_dim=head_dim,
+        positions=positions,
+        rope_theta=rope_theta,
+        window=window,
+        gqa_repeat=gqa_repeat,
+    )
+    k = linear(x, params["wk"]).reshape(B, S, n_kv_heads, head_dim)
+    v = linear(x, params["wv"]).reshape(B, S, n_kv_heads, head_dim)
+    if "k_norm" in params:
+        k = rms_norm(k, params["k_norm"])
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    if rope_theta:
+        k = apply_rope(k, positions, rope_theta)
+    eff = min(window, cache_len) if window is not None else cache_len
+    if S >= eff:
+        k_c, v_c = k[:, S - eff :], v[:, S - eff :]
+    else:
+        pad = ((0, 0), (0, eff - S), (0, 0), (0, 0))
+        k_c, v_c = jnp.pad(k, pad), jnp.pad(v, pad)
+    return out, {"k": k_c, "v": v_c}
+
+
+def attention_decode(
+    params: Params,
+    x: jax.Array,  # (B, 1, d)
+    cache: dict[str, jax.Array],
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    position: jax.Array,  # scalar int32 — absolute position of the new token
+    rope_theta: float,
+    window: int | None,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """One decode step: write the new KV at the right slot (rolling for
+    windowed layers), attend, project."""
+    B, _, d = x.shape
+    q = linear(x, params["wq"]).reshape(B, 1, n_heads, head_dim)
+    k = linear(x, params["wk"]).reshape(B, 1, n_kv_heads, head_dim)
+    v = linear(x, params["wv"]).reshape(B, 1, n_kv_heads, head_dim)
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if rope_theta:
+        pos_b = jnp.full((B, 1), position, jnp.int32)
+        q = apply_rope(q, pos_b, rope_theta)
+        k = apply_rope(k, pos_b, rope_theta)
+
+    k_cache, v_cache = cache["k"], cache["v"]
+    Smax = k_cache.shape[1]
+    slot = position % Smax if window is not None else position
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+    valid = jnp.minimum(position + 1, Smax)
+    out = decode_attention(q, k_cache, v_cache, valid_len=valid)
+    y = linear(out.reshape(B, 1, n_heads * head_dim), params["wo"])
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def reference_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal=True, window=None, scale=None
+) -> jax.Array:
+    """O(S^2)-memory oracle used by tests (materializes the score matrix)."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = (q * scale).reshape(B, S, KV, G, D)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, k, preferred_element_type=jnp.float32)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= i >= j
+    if window is not None:
+        mask &= (i - j) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgts,bskd->btkgd", p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    return out.reshape(B, S, H, D).astype(q.dtype)

@@ -1,0 +1,179 @@
+"""Shared neural-net building blocks (pure functions over param pytrees).
+
+Conventions:
+* params are nested dicts of jnp arrays; weights stored in `param_dtype`
+  (bf16 for the large configs), matmuls accumulate in f32 via
+  ``preferred_element_type``;
+* no biases on projection layers (llama convention) unless stated;
+* every function is shape-polymorphic over batch/sequence so the same code
+  serves train (B,S), prefill (B,S) and decode (B,1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# --------------------------------------------------------------------- #
+# init helpers                                                          #
+# --------------------------------------------------------------------- #
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------- #
+# norms                                                                 #
+# --------------------------------------------------------------------- #
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rms_norm_init(d: int) -> jax.Array:
+    # zero-centered scale (gemma convention: weight = 1 + scale)
+    return jnp.zeros((d,), jnp.float32)
+
+
+# --------------------------------------------------------------------- #
+# rotary position embeddings                                            #
+# --------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    dt = x.dtype
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+# --------------------------------------------------------------------- #
+# projections                                                           #
+# --------------------------------------------------------------------- #
+def linear(x: jax.Array, w: jax.Array) -> jax.Array:
+    # f32 accumulation, cast at the boundary. (Hillclimb H1.2 tried bf16
+    # register types to shrink TP all-reduces; XLA's excess-precision pass
+    # re-promoted the reduces to f32 and the extra converts only grew the
+    # byte count — refuted, reverted. See EXPERIMENTS.md §Perf.)
+    return jnp.einsum(
+        "...d,df->...f", x, w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# SwiGLU MLP                                                            #
+# --------------------------------------------------------------------- #
+def swiglu_init(key, d: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff, dtype),
+        "w_up": dense_init(k2, d, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def swiglu(params: Params, x: jax.Array) -> jax.Array:
+    g = linear(x, params["w_gate"])
+    u = linear(x, params["w_up"])
+    return linear(jax.nn.silu(g) * u, params["w_down"])
+
+
+# --------------------------------------------------------------------- #
+# embedding / chunked cross-entropy                                     #
+# --------------------------------------------------------------------- #
+def embed(tok_table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(tok_table, tokens, axis=0)
+
+
+def chunked_softmax_xent(
+    hidden: jax.Array,  # (B, S, d)
+    w_unembed: jax.Array,  # (d, V) — V possibly padded for sharding
+    labels: jax.Array,  # (B, S) int32; -1 => masked out
+    chunk: int = 1024,
+    logit_softcap: float | None = None,
+    valid_vocab: int | None = None,  # mask padded vocab columns
+) -> jax.Array:
+    """Mean cross-entropy without materializing (B, S, V) logits.
+
+    Scans over sequence chunks; each chunk's logits live only inside one
+    scan step (V can be 262k — the full logits would be tens of GB).
+    Returns the mean NLL over unmasked positions (f32 scalar).
+    """
+    B, S, d = hidden.shape
+    n_chunks = max(1, S // chunk)
+    assert S % n_chunks == 0, (S, chunk)
+    c = S // n_chunks
+    h = hidden.reshape(B, n_chunks, c, d).swapaxes(0, 1)  # (n, B, c, d)
+    y = labels.reshape(B, n_chunks, c).swapaxes(0, 1)  # (n, B, c)
+    V = w_unembed.shape[1]
+
+    def step(carry, xs):
+        loss_sum, count = carry
+        h_c, y_c = xs
+        logits = jnp.einsum(
+            "bcd,dv->bcv", h_c, w_unembed, preferred_element_type=jnp.float32
+        )
+        if logit_softcap is not None:
+            logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+        if valid_vocab is not None and valid_vocab < V:
+            logits = jnp.where(
+                (jnp.arange(V) < valid_vocab)[None, None, :], logits, -1e30
+            )
+        lse = jax.nn.logsumexp(logits, axis=-1)  # (B, c)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(y_c, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (y_c >= 0).astype(jnp.float32)
+        loss_sum = loss_sum + jnp.sum((lse - gold) * mask)
+        count = count + jnp.sum(mask)
+        return (loss_sum, count), None
+
+    (loss_sum, count), _ = jax.lax.scan(
+        step, (jnp.float32(0.0), jnp.float32(0.0)), (h, y)
+    )
+    return loss_sum / jnp.maximum(count, 1.0)
+
+
+def logits_for_last(
+    hidden_last: jax.Array,  # (B, 1, d)
+    w_unembed: jax.Array,
+    logit_softcap: float | None = None,
+    valid_vocab: int | None = None,
+) -> jax.Array:
+    logits = jnp.einsum(
+        "bsd,dv->bsv", hidden_last, w_unembed, preferred_element_type=jnp.float32
+    )
+    if logit_softcap is not None:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    V = w_unembed.shape[1]
+    if valid_vocab is not None and valid_vocab < V:
+        logits = jnp.where(
+            (jnp.arange(V) < valid_vocab)[None, None, :], logits, -1e30
+        )
+    return logits
+
+
+def pad_to_multiple(n: int, multiple: int) -> int:
+    return ((n + multiple - 1) // multiple) * multiple

@@ -1,0 +1,222 @@
+"""Mamba (selective SSM) block — chunked parallel scan + recurrent decode.
+
+Structure follows Mamba-1 as used by Jamba: in_proj -> (x, z); causal
+depthwise conv on x; silu; input-dependent (dt, B, C); selective state
+update h_t = exp(dt*A) h_{t-1} + dt*B x_t; y = C·h + D*x; gated by silu(z);
+out_proj.
+
+Train/prefill runs a *chunked* scan: within a chunk of `chunk` timesteps an
+associative scan runs in parallel; a lax.scan carries the (inner, d_state)
+state across chunks. This bounds the materialized (B, chunk, inner, state)
+discretized tensors — the same blocking the Pallas kernel
+(repro.kernels.ssm_scan) uses on TPU VMEM.
+
+Decode keeps state = {ssm: (B, inner, d_state), conv: (B, K-1, inner)} —
+O(1) per token, which is what makes the hybrid archs long_500k-capable.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init
+
+
+def mamba_init(
+    key,
+    d_model: int,
+    *,
+    expand: int = 2,
+    d_state: int = 16,
+    d_conv: int = 4,
+    dt_rank: int | None = None,
+    dtype=jnp.bfloat16,
+) -> Params:
+    inner = expand * d_model
+    dt_rank = dt_rank or max(1, math.ceil(d_model / 16))
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32), (inner, 1))
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * inner, dtype),
+        "conv_w": (
+            jax.random.normal(ks[1], (d_conv, inner), jnp.float32) / math.sqrt(d_conv)
+        ).astype(dtype),
+        "conv_b": jnp.zeros((inner,), jnp.float32),
+        "x_proj": dense_init(ks[2], inner, dt_rank + 2 * d_state, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, inner, dtype),
+        "dt_bias": jnp.log(
+            jnp.exp(
+                jnp.exp(
+                    jax.random.uniform(ks[4], (inner,), jnp.float32)
+                    * (math.log(0.1) - math.log(0.001))
+                    + math.log(0.001)
+                )
+            )
+            - 1.0
+        ),  # softplus^-1 of dt in [1e-3, 1e-1]
+        "A_log": jnp.log(a),
+        "D": jnp.ones((inner,), jnp.float32),
+        "out_proj": dense_init(ks[5], inner, d_model, dtype),
+    }
+
+
+def _split_xz(params: Params, u: jax.Array) -> tuple[jax.Array, jax.Array]:
+    xz = jnp.einsum(
+        "bsd,df->bsf", u, params["in_proj"], preferred_element_type=jnp.float32
+    ).astype(u.dtype)
+    inner = xz.shape[-1] // 2
+    return xz[..., :inner], xz[..., inner:]
+
+
+def _conv_causal(params: Params, x: jax.Array, init: jax.Array | None = None):
+    """Depthwise causal conv along S. x: (B, S, inner).
+    Returns (y, tail) where tail = last K-1 inputs (decode conv state)."""
+    K = params["conv_w"].shape[0]
+    if init is None:
+        init = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([init.astype(x.dtype), x], axis=1)  # (B, S+K-1, inner)
+    y = jnp.zeros(x.shape, jnp.float32)
+    for i in range(K):
+        y = y + xp[:, i : i + x.shape[1]].astype(jnp.float32) * params["conv_w"][
+            i
+        ].astype(jnp.float32)
+    y = y + params["conv_b"]
+    tail = xp[:, xp.shape[1] - (K - 1) :]
+    return y.astype(x.dtype), tail
+
+
+def _dt_b_c(params: Params, x: jax.Array, d_state: int):
+    """x: (B, S, inner) -> dt (B,S,inner) f32, Bmat/Cmat (B,S,state) f32."""
+    proj = jnp.einsum(
+        "bsi,ir->bsr", x, params["x_proj"], preferred_element_type=jnp.float32
+    )
+    dt_rank = proj.shape[-1] - 2 * d_state
+    dt_low, Bm, Cm = (
+        proj[..., :dt_rank],
+        proj[..., dt_rank : dt_rank + d_state],
+        proj[..., dt_rank + 2 * d_state - d_state :],
+    )
+    dt = jnp.einsum(
+        "bsr,ri->bsi",
+        dt_low.astype(x.dtype),
+        params["dt_proj"],
+        preferred_element_type=jnp.float32,
+    )
+    dt = jax.nn.softplus(dt + params["dt_bias"])
+    return dt, Bm, Cm
+
+
+def _ssm_binop(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def mamba_scan_chunked(
+    dt: jax.Array,  # (B, S, inner) f32
+    Bm: jax.Array,  # (B, S, state) f32
+    Cm: jax.Array,  # (B, S, state) f32
+    x: jax.Array,  # (B, S, inner)
+    A: jax.Array,  # (inner, state) f32 (negative)
+    *,
+    chunk: int = 256,
+    h0: jax.Array | None = None,  # (B, inner, state) f32
+    scan_dtype=jnp.float32,
+) -> tuple[jax.Array, jax.Array]:
+    """Selective scan. Returns (y (B,S,inner) f32, h_final)."""
+    B, S, inner = dt.shape
+    state = Bm.shape[-1]
+    chunk = min(chunk, S)
+    S_orig = S
+    if S % chunk:  # ragged tail: pad with dt=0 (identity transition)
+        pad = chunk - S % chunk
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    n = S // chunk
+    if h0 is None:
+        h0 = jnp.zeros((B, inner, state), jnp.float32)
+
+    dt_c = dt.reshape(B, n, chunk, inner).swapaxes(0, 1)
+    B_c = Bm.reshape(B, n, chunk, state).swapaxes(0, 1)
+    C_c = Cm.reshape(B, n, chunk, state).swapaxes(0, 1)
+    x_c = x.reshape(B, n, chunk, inner).swapaxes(0, 1)
+
+    scan_dtype = jnp.dtype(scan_dtype)
+
+    def chunk_step(h, inputs):
+        dt_i, B_i, C_i, x_i = inputs  # (B, c, ...)
+        # discretize: Abar (B,c,inner,state), Bx (B,c,inner,state)
+        Abar = jnp.exp(dt_i[..., None] * A[None, None])  # broadcast
+        Bx = (dt_i * x_i.astype(jnp.float32))[..., None] * B_i[..., None, :]
+        # seed the recurrence with the carry: fold h into the first element
+        Bx = Bx.at[:, 0].add(Abar[:, 0] * h)
+        Aacc, Hall = jax.lax.associative_scan(
+            _ssm_binop,
+            (Abar.astype(scan_dtype), Bx.astype(scan_dtype)),
+            axis=1,
+        )
+        y = jnp.einsum(
+            "bcis,bcs->bci", Hall, C_i.astype(scan_dtype),
+            preferred_element_type=jnp.float32,
+        )
+        return Hall[:, -1].astype(jnp.float32), y.astype(jnp.float32)
+
+    h_final, ys = jax.lax.scan(chunk_step, h0, (dt_c, B_c, C_c, x_c))
+    y = ys.swapaxes(0, 1).reshape(B, S, inner)[:, :S_orig]
+    return y, h_final
+
+
+def mamba_apply(
+    params: Params,
+    u: jax.Array,  # (B, S, d)
+    *,
+    d_state: int,
+    chunk: int = 256,
+    state: dict[str, jax.Array] | None = None,
+    return_state: bool = False,
+    scan_dtype=jnp.float32,
+) -> Any:
+    """Full mamba mixer. If `state` given, continues from it (prefill
+    chaining); if `return_state`, also returns {ssm, conv} for decode."""
+    x, z = _split_xz(params, u)
+    conv_init = state["conv"] if state is not None else None
+    x_conv, conv_tail = _conv_causal(params, x, conv_init)
+    x_act = jax.nn.silu(x_conv.astype(jnp.float32)).astype(u.dtype)
+    dt, Bm, Cm = _dt_b_c(params, x_act, d_state)
+    A = -jnp.exp(params["A_log"])
+    h0 = state["ssm"] if state is not None else None
+    y, h = mamba_scan_chunked(
+        dt, Bm, Cm, x_act, A, chunk=chunk, h0=h0, scan_dtype=scan_dtype
+    )
+    y = y + x_act.astype(jnp.float32) * params["D"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum(
+        "bsi,id->bsd",
+        y.astype(u.dtype),
+        params["out_proj"],
+        preferred_element_type=jnp.float32,
+    ).astype(u.dtype)
+    if not return_state:
+        return out
+    return out, {"ssm": h, "conv": conv_tail}
+
+
+def mamba_decode(
+    params: Params,
+    u: jax.Array,  # (B, 1, d)
+    state: dict[str, jax.Array],
+    *,
+    d_state: int,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """O(1) single-token step."""
+    out, new_state = mamba_apply(
+        params, u, d_state=d_state, chunk=1, state=state, return_state=True
+    )
+    return out, new_state

@@ -1,0 +1,610 @@
+"""Composable decoder model built from an ArchConfig.
+
+An architecture is a sequence of *groups*; each group is a repeating
+*pattern* of LayerSpecs (mixer kind + attention window + FFN kind). Layer
+parameters inside a group are stacked on a leading `repeats` axis and the
+group is applied with ``lax.scan`` — the HLO stays one-pattern-sized no
+matter how deep the model is (essential for 72-layer 398B dry-runs), and
+it is also the production choice (compile time, code size).
+
+Heterogeneous stacks come for free: jamba's 1-attention-per-8 pattern or
+gemma3's 5-local:1-global schedule are just patterns; positions inside a
+pattern may carry different mixers with different cache pytrees.
+
+Three entry points:
+  * ``train_loss``  — tokens/embeds -> mean NLL (chunked CE; logits never
+    materialize at (B, S, V)),
+  * ``prefill``     — consume a prompt, return last-position logits + the
+    decode cache,
+  * ``decode_step`` — one token against the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba as mam
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xl
+from repro.sharding.act import constrain_batch
+from repro.models.layers import (
+    Params,
+    chunked_softmax_xent,
+    dense_init,
+    embed,
+    embed_init,
+    logits_for_last,
+    rms_norm,
+    rms_norm_init,
+)
+
+
+# --------------------------------------------------------------------- #
+# configuration                                                         #
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "attn"  # attn | mamba | mlstm | slstm
+    window: int | None = None  # sliding-window size for attn
+    ffn: str = "dense"  # dense | moe | none
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | vlm | audio
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    #: ((pattern, repeats), ...) — sum(len(p)*r) == n_layers
+    groups: tuple[tuple[tuple[LayerSpec, ...], int], ...]
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_capacity_factor: float = 1.25
+    mamba_d_state: int = 16
+    mamba_expand: int = 2
+    mamba_conv: int = 4
+    #: dtype of the discretized SSM scan operands (Abar, Bx). bf16 halves
+    #: the dominant train-memory bytes for hybrid archs (hillclimb H3);
+    #: the state carry stays f32 at chunk boundaries.
+    mamba_scan_dtype: str = "float32"
+    n_codebooks: int = 1  # musicgen: 4 parallel heads
+    frontend: str | None = None  # None | "vit_stub" | "encodec_stub"
+    n_patches: int = 0  # vlm: patch embeddings prepended
+    tie_embeddings: bool = False
+    embed_scale: bool = False  # gemma: scale embeddings by sqrt(d)
+    param_dtype: str = "bfloat16"
+    loss_chunk: int = 512
+    mamba_chunk: int = 128
+    attn_q_block: int = 512
+    attn_kv_block: int = 512
+    vocab_pad_multiple: int = 128
+    #: GQA layout: False = grouped (KV,G,D) einsums (paper-faithful
+    #: baseline); True = repeat KV heads to H before attention so the
+    #: head dim shards cleanly on the model axis (hillclimb H1 — kills
+    #: the reshape resharding all-gathers; see EXPERIMENTS.md §Perf).
+    gqa_repeat: bool = False
+    source: str = ""  # provenance note
+
+    @property
+    def n_layers(self) -> int:
+        return sum(len(p) * r for p, r in self.groups)
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up so the model axis can shard it (see planner)."""
+        from repro.models.layers import pad_to_multiple
+
+        return pad_to_multiple(self.vocab_size, self.vocab_pad_multiple)
+
+    @property
+    def uses_embedding_input(self) -> bool:
+        """Frontend-stub archs feed embeddings, not token ids."""
+        return self.frontend == "encodec_stub"
+
+    def layer_specs(self) -> list[LayerSpec]:
+        out: list[LayerSpec] = []
+        for pattern, repeats in self.groups:
+            out.extend(list(pattern) * repeats)
+        return out
+
+
+def tiny_variant(cfg: ArchConfig, **overrides) -> ArchConfig:
+    """Reduced same-family config for CPU smoke tests: shrink width/depth/
+    experts/vocab while keeping the layer-pattern structure."""
+    shrunk_groups = tuple(
+        (pattern, min(repeats, 1)) for pattern, repeats in cfg.groups
+    )
+    base = dataclasses.replace(
+        cfg,
+        name=cfg.name + "-tiny",
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=32,
+        d_ff=256 if cfg.d_ff else 0,
+        vocab_size=512,
+        groups=shrunk_groups,
+        moe_experts=min(cfg.moe_experts, 4),
+        moe_top_k=min(cfg.moe_top_k, 2),
+        moe_capacity_factor=4.0,  # ample: decode-vs-prefill tests are exact
+        n_patches=min(cfg.n_patches, 8),
+        loss_chunk=64,
+        mamba_chunk=16,
+        attn_q_block=32,
+        attn_kv_block=32,
+        param_dtype="float32",
+    )
+    return dataclasses.replace(base, **overrides)
+
+
+# --------------------------------------------------------------------- #
+# parameter init                                                        #
+# --------------------------------------------------------------------- #
+def _layer_init(key, spec: LayerSpec, cfg: ArchConfig) -> Params:
+    km, kf = jax.random.split(key)
+    p: Params = {"norm1": rms_norm_init(cfg.d_model)}
+    if spec.mixer == "attn":
+        p["mixer"] = attn.attention_init(
+            km,
+            cfg.d_model,
+            cfg.n_heads,
+            cfg.n_kv_heads,
+            cfg.head_dim,
+            cfg.dtype,
+            qk_norm=cfg.qk_norm,
+        )
+    elif spec.mixer == "mamba":
+        p["mixer"] = mam.mamba_init(
+            km,
+            cfg.d_model,
+            expand=cfg.mamba_expand,
+            d_state=cfg.mamba_d_state,
+            d_conv=cfg.mamba_conv,
+            dtype=cfg.dtype,
+        )
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xl.mlstm_init(km, cfg.d_model, cfg.n_heads, cfg.dtype)
+    elif spec.mixer == "slstm":
+        p["mixer"] = xl.slstm_init(km, cfg.d_model, cfg.n_heads, cfg.dtype)
+    else:  # pragma: no cover
+        raise ValueError(spec.mixer)
+    if spec.ffn != "none":
+        p["norm2"] = rms_norm_init(cfg.d_model)
+        if spec.ffn == "dense":
+            from repro.models.layers import swiglu_init
+
+            p["ffn"] = swiglu_init(kf, cfg.d_model, cfg.d_ff, cfg.dtype)
+        elif spec.ffn == "moe":
+            p["ffn"] = moe_mod.moe_init(
+                kf, cfg.d_model, cfg.d_ff, cfg.moe_experts, cfg.dtype
+            )
+        else:  # pragma: no cover
+            raise ValueError(spec.ffn)
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Params:
+    keys = jax.random.split(key, len(cfg.groups) + 3)
+    groups = []
+    for gi, (pattern, repeats) in enumerate(cfg.groups):
+        pat_keys = jax.random.split(keys[gi], repeats * len(pattern)).reshape(
+            repeats, len(pattern), 2
+        )
+        group_params = {}
+        for i, spec in enumerate(pattern):
+            group_params[str(i)] = jax.vmap(
+                lambda k, s=spec: _layer_init(k, s, cfg)
+            )(pat_keys[:, i])
+        groups.append(group_params)
+    kp, ke, kh = keys[-3], keys[-2], keys[-1]
+    params: Params = {
+        "groups": groups,
+        "final_norm": rms_norm_init(cfg.d_model),
+    }
+    V = cfg.padded_vocab
+    if cfg.uses_embedding_input:
+        params["lm_head"] = dense_init(
+            kh, cfg.d_model, cfg.n_codebooks * V, cfg.dtype
+        )
+    else:
+        params["embed"] = embed_init(ke, V, cfg.d_model, cfg.dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(kh, cfg.d_model, V, cfg.dtype)
+    return params
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# --------------------------------------------------------------------- #
+# layer application                                                     #
+# --------------------------------------------------------------------- #
+def _mixer_train(p, spec: LayerSpec, h, cfg: ArchConfig, positions):
+    if spec.mixer == "attn":
+        return attn.attention_apply(
+            p,
+            h,
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim,
+            positions=positions,
+            rope_theta=cfg.rope_theta,
+            window=spec.window,
+            q_block=cfg.attn_q_block,
+            kv_block=cfg.attn_kv_block,
+            gqa_repeat=cfg.gqa_repeat,
+        )
+    if spec.mixer == "mamba":
+        return mam.mamba_apply(
+            p, h, d_state=cfg.mamba_d_state, chunk=cfg.mamba_chunk,
+            scan_dtype=cfg.mamba_scan_dtype,
+        )
+    if spec.mixer == "mlstm":
+        return xl.mlstm_apply(p, h, n_heads=cfg.n_heads)
+    if spec.mixer == "slstm":
+        return xl.slstm_apply(p, h, n_heads=cfg.n_heads)
+    raise ValueError(spec.mixer)  # pragma: no cover
+
+
+def _ffn_train(p, spec: LayerSpec, h, cfg: ArchConfig):
+    """Returns (y, aux_loss_scalar)."""
+    if spec.ffn == "dense":
+        from repro.models.layers import swiglu
+
+        return swiglu(p, h), jnp.float32(0.0)
+    y, aux = moe_mod.moe_apply(
+        p,
+        h,
+        top_k=cfg.moe_top_k,
+        capacity_factor=cfg.moe_capacity_factor,
+        return_aux=True,
+    )
+    return y, aux.get("load_balance_loss", jnp.float32(0.0))
+
+
+def _layer_train(p, spec: LayerSpec, x, cfg: ArchConfig, positions):
+    h = rms_norm(x, p["norm1"])
+    x = constrain_batch(x + _mixer_train(p["mixer"], spec, h, cfg, positions))
+    aux = jnp.float32(0.0)
+    if spec.ffn != "none":
+        h = rms_norm(x, p["norm2"])
+        y, aux = _ffn_train(p["ffn"], spec, h, cfg)
+        x = constrain_batch(x + y)
+    return x, aux
+
+
+def _backbone_train(params, cfg: ArchConfig, x, positions):
+    """Apply all groups with scan-over-repeats + remat per pattern block."""
+    aux_total = jnp.float32(0.0)
+
+    for gi, (pattern, repeats) in enumerate(cfg.groups):
+        gp = params["groups"][gi]
+
+        @jax.checkpoint
+        def block(x, layer_stack, pattern=pattern):
+            aux = jnp.float32(0.0)
+            for i, spec in enumerate(pattern):
+                x, a = _layer_train(layer_stack[str(i)], spec, x, cfg, positions)
+                aux = aux + a
+            return x, aux
+
+        def scan_body(carry, layer_stack, block=block):
+            x, aux = carry
+            x, a = block(x, layer_stack)
+            return (x, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            scan_body, (x, aux_total), gp, length=repeats
+        )
+    return x, aux_total
+
+
+# --------------------------------------------------------------------- #
+# train loss                                                            #
+# --------------------------------------------------------------------- #
+def _input_hidden(params, cfg: ArchConfig, batch) -> tuple[jax.Array, jax.Array]:
+    """Returns (hidden (B,S,d), positions (S,))."""
+    if cfg.uses_embedding_input:  # musicgen: precomputed frame embeddings
+        x = batch["frame_embeds"].astype(cfg.dtype)
+    elif cfg.frontend == "vit_stub":  # internvl: patches ++ text tokens
+        patches = batch["patch_embeds"].astype(cfg.dtype)  # (B,P,d)
+        text = embed(params["embed"], batch["tokens"])  # (B,S-P,d)
+        x = jnp.concatenate([patches, text], axis=1)
+    else:
+        x = embed(params["embed"], batch["tokens"])
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    x = constrain_batch(x)
+    S = x.shape[1]
+    return x, jnp.arange(S)
+
+
+def _unembed_weight(params, cfg: ArchConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def train_loss(
+    params: Params, cfg: ArchConfig, batch: dict[str, jax.Array]
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """batch: tokens/frame_embeds/patch_embeds + labels.
+    labels: (B, S) int32, or (B, S, K) for multi-codebook archs; -1 masks."""
+    x, positions = _input_hidden(params, cfg, batch)
+    x, aux = _backbone_train(params, cfg, x, positions)
+    x = rms_norm(x, params["final_norm"])
+    w = _unembed_weight(params, cfg)
+    labels = batch["labels"]
+    if cfg.n_codebooks > 1:
+        V = cfg.padded_vocab
+        losses = []
+        for cb in range(cfg.n_codebooks):
+            losses.append(
+                chunked_softmax_xent(
+                    x,
+                    w[:, cb * V : (cb + 1) * V],
+                    labels[..., cb],
+                    cfg.loss_chunk,
+                    valid_vocab=cfg.vocab_size,
+                )
+            )
+        nll = jnp.mean(jnp.stack(losses))
+    else:
+        nll = chunked_softmax_xent(
+            x, w, labels, cfg.loss_chunk, valid_vocab=cfg.vocab_size
+        )
+    aux_scaled = 0.01 * aux / max(1, cfg.n_layers)
+    metrics = {"nll": nll, "moe_aux": aux}
+    return nll + aux_scaled, metrics
+
+
+# --------------------------------------------------------------------- #
+# caches                                                                #
+# --------------------------------------------------------------------- #
+def _mixer_cache_spec(
+    spec: LayerSpec, cfg: ArchConfig, B: int, cache_len: int
+) -> dict[str, tuple[tuple[int, ...], Any]]:
+    """(shape, dtype) per cache leaf for ONE layer (unstacked)."""
+    if spec.mixer == "attn":
+        eff = min(spec.window, cache_len) if spec.window else cache_len
+        kv = (B, eff, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": (kv, cfg.dtype), "v": (kv, cfg.dtype)}
+    if spec.mixer == "mamba":
+        inner = cfg.mamba_expand * cfg.d_model
+        return {
+            "ssm": ((B, inner, cfg.mamba_d_state), jnp.float32),
+            "conv": ((B, cfg.mamba_conv - 1, inner), cfg.dtype),
+        }
+    if spec.mixer == "mlstm":
+        D = cfg.d_model // cfg.n_heads
+        return {
+            "C": ((B, cfg.n_heads, D, D), jnp.float32),
+            "n": ((B, cfg.n_heads, D), jnp.float32),
+            "m": ((B, cfg.n_heads), jnp.float32),
+        }
+    if spec.mixer == "slstm":
+        D = cfg.d_model // cfg.n_heads
+        s = ((B, cfg.n_heads, D), jnp.float32)
+        return {"c": s, "n": s, "h": s, "m": s}
+    raise ValueError(spec.mixer)  # pragma: no cover
+
+
+def cache_spec(
+    cfg: ArchConfig, batch_size: int, cache_len: int
+) -> dict[str, Any]:
+    """ShapeDtypeStruct pytree for the decode cache (dry-run input)."""
+    groups = []
+    for pattern, repeats in cfg.groups:
+        g = {}
+        for i, spec in enumerate(pattern):
+            leaves = _mixer_cache_spec(spec, cfg, batch_size, cache_len)
+            g[str(i)] = {
+                k: jax.ShapeDtypeStruct((repeats, *shape), dt)
+                for k, (shape, dt) in leaves.items()
+            }
+        groups.append(g)
+    return {
+        "groups": groups,
+        "position": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, cache_len: int):
+    spec = cache_spec(cfg, batch_size, cache_len)
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype)
+        if s.dtype != jnp.int32
+        else jnp.zeros(s.shape, s.dtype),
+        spec,
+        is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct),
+    )
+
+
+# --------------------------------------------------------------------- #
+# prefill                                                               #
+# --------------------------------------------------------------------- #
+def _layer_prefill(p, spec: LayerSpec, x, cfg: ArchConfig, positions, cache_len):
+    h = rms_norm(x, p["norm1"])
+    if spec.mixer == "attn":
+        y, c = attn.attention_prefill(
+            p["mixer"],
+            h,
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim,
+            positions=positions,
+            rope_theta=cfg.rope_theta,
+            window=spec.window,
+            cache_len=cache_len,
+            gqa_repeat=cfg.gqa_repeat,
+        )
+    elif spec.mixer == "mamba":
+        y, c = mam.mamba_apply(
+            p["mixer"],
+            h,
+            d_state=cfg.mamba_d_state,
+            chunk=cfg.mamba_chunk,
+            return_state=True,
+        )
+    elif spec.mixer == "mlstm":
+        y, c = xl.mlstm_apply(p["mixer"], h, n_heads=cfg.n_heads, return_state=True)
+    elif spec.mixer == "slstm":
+        y, c = xl.slstm_apply(p["mixer"], h, n_heads=cfg.n_heads, return_state=True)
+    else:  # pragma: no cover
+        raise ValueError(spec.mixer)
+    x = x + y
+    if spec.ffn != "none":
+        h = rms_norm(x, p["norm2"])
+        y, _ = _ffn_train(p["ffn"], spec, h, cfg)
+        x = x + y
+    return x, c
+
+
+def prefill(
+    params: Params, cfg: ArchConfig, batch: dict[str, jax.Array], cache_len: int
+) -> tuple[jax.Array, Any]:
+    """Consume the prompt; return (last-token logits, decode cache)."""
+    x, positions = _input_hidden(params, cfg, batch)
+    B, S, _ = x.shape
+    cache_groups = []
+    for gi, (pattern, repeats) in enumerate(cfg.groups):
+        gp = params["groups"][gi]
+
+        @jax.checkpoint
+        def block(x, layer_stack, pattern=pattern):
+            caches = {}
+            for i, spec in enumerate(pattern):
+                x, c = _layer_prefill(
+                    layer_stack[str(i)], spec, x, cfg, positions, cache_len
+                )
+                caches[str(i)] = c
+            return x, caches
+
+        def scan_body(x, layer_stack, block=block):
+            return block(x, layer_stack)
+
+        x, caches = jax.lax.scan(scan_body, x, gp, length=repeats)
+        cache_groups.append(caches)
+    x = rms_norm(x, params["final_norm"])
+    w = _unembed_weight(params, cfg)
+    logits = logits_for_last(x[:, -1:], w, valid_vocab=cfg.vocab_size)
+    if cfg.n_codebooks > 1:
+        logits = logits.reshape(B, 1, cfg.n_codebooks, cfg.padded_vocab)
+    cache = {"groups": cache_groups, "position": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+# --------------------------------------------------------------------- #
+# decode                                                                #
+# --------------------------------------------------------------------- #
+def _layer_decode(p, spec: LayerSpec, x, c, cfg: ArchConfig, position):
+    h = rms_norm(x, p["norm1"])
+    if spec.mixer == "attn":
+        y, c = attn.attention_decode(
+            p["mixer"],
+            h,
+            c,
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim,
+            position=position,
+            rope_theta=cfg.rope_theta,
+            window=spec.window,
+        )
+    elif spec.mixer == "mamba":
+        y, c = mam.mamba_decode(p["mixer"], h, c, d_state=cfg.mamba_d_state)
+    elif spec.mixer == "mlstm":
+        y, c = xl.mlstm_recurrent(p["mixer"], h, c, n_heads=cfg.n_heads)
+    elif spec.mixer == "slstm":
+        y, c = xl.slstm_apply(
+            p["mixer"], h, n_heads=cfg.n_heads, state=c, return_state=True
+        )
+    else:  # pragma: no cover
+        raise ValueError(spec.mixer)
+    x = x + y
+    if spec.ffn != "none":
+        h = rms_norm(x, p["norm2"])
+        y, _ = _ffn_train(p["ffn"], spec, h, cfg)
+        x = x + y
+    return x, c
+
+
+def decode_step(
+    params: Params, cfg: ArchConfig, batch: dict[str, jax.Array], cache: Any
+) -> tuple[jax.Array, Any]:
+    """One token for every sequence in the batch. batch: {"tokens": (B,1)}
+    or {"frame_embeds": (B,1,d)}. Returns (logits, new cache)."""
+    position = cache["position"]
+    if cfg.uses_embedding_input:
+        x = batch["frame_embeds"].astype(cfg.dtype)
+    else:
+        x = embed(params["embed"], batch["tokens"])
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    B = x.shape[0]
+
+    new_groups = []
+    for gi, (pattern, repeats) in enumerate(cfg.groups):
+        gp = params["groups"][gi]
+        gc = cache["groups"][gi]
+
+        def scan_body(x, stacks, pattern=pattern):
+            layer_stack, cache_stack = stacks
+            new_caches = {}
+            for i, spec in enumerate(pattern):
+                x, c = _layer_decode(
+                    layer_stack[str(i)], spec, x, cache_stack[str(i)], cfg, position
+                )
+                new_caches[str(i)] = c
+            return x, new_caches
+
+        x, new_caches = jax.lax.scan(scan_body, x, (gp, gc), length=repeats)
+        new_groups.append(new_caches)
+
+    x = rms_norm(x, params["final_norm"])
+    w = _unembed_weight(params, cfg)
+    logits = logits_for_last(x, w, valid_vocab=cfg.vocab_size)
+    if cfg.n_codebooks > 1:
+        logits = logits.reshape(B, 1, cfg.n_codebooks, cfg.padded_vocab)
+    new_cache = {"groups": new_groups, "position": position + 1}
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------- #
+# accounting                                                            #
+# --------------------------------------------------------------------- #
+def active_param_count(cfg: ArchConfig, params: Params) -> int:
+    """Parameters touched per token (MoE: top_k of E experts)."""
+    total = param_count(params)
+    if cfg.moe_experts and cfg.moe_top_k:
+        expert_leaves = 0
+        for gi, (pattern, repeats) in enumerate(cfg.groups):
+            for i, spec in enumerate(pattern):
+                if spec.ffn == "moe":
+                    ffn = params["groups"][gi][str(i)]["ffn"]
+                    for name in ("w_gate", "w_up", "w_down"):
+                        expert_leaves += ffn[name].size
+        inactive = expert_leaves * (1 - cfg.moe_top_k / cfg.moe_experts)
+        return int(total - inactive)
+    return total
+
+
+def model_flops_per_token(cfg: ArchConfig, params: Params) -> float:
+    """The 6N approximation (training); N = active params."""
+    return 6.0 * active_param_count(cfg, params)

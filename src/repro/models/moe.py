@@ -1,0 +1,206 @@
+"""Mixture-of-Experts: token-choice top-k routing with capacity dispatch.
+
+Design notes (these matter for the sharding story — see DESIGN.md §5):
+
+* Routing is computed *per batch row* and dispatch/combine are gathers and
+  scatter-adds along the sequence axis — every op is batch-parallel, so the
+  data-axis sharding is untouched and no one-hot (T, E, C) dispatch tensor
+  is ever built.
+* Expert FFNs run as expert-batched einsums ``(B, E, C, d) x (E, d, f)``:
+  with experts divisible by the model axis the E dimension shards (expert
+  parallelism, zero weight movement); otherwise the planner shards `f`
+  (tensor parallelism within each expert — mixtral's 8 experts on a 16-way
+  axis).
+* Capacity C = ceil(S * k / E * capacity_factor); overflow tokens are
+  dropped (GShard semantics) — the combine scatter simply adds nothing for
+  them, and the router's auxiliary load-balancing loss pushes the overflow
+  rate down.
+* Decode (S == 1 per step): dispatch degenerates, so we run the dense-
+  all-experts path masked by the gates. Decode is HBM-bandwidth-bound on
+  expert weights, which are read in full either way — the extra FLOPs are
+  free in roofline terms (documented in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init
+from repro.sharding.act import constrain_batch, constrain_expert_batch
+
+
+def moe_init(
+    key, d_model: int, d_ff: int, n_experts: int, dtype
+) -> Params:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": dense_init(kr, d_model, n_experts, jnp.float32),
+        "w_gate": jax.vmap(lambda k: dense_init(k, d_model, d_ff, dtype))(
+            jax.random.split(kg, n_experts)
+        ),
+        "w_up": jax.vmap(lambda k: dense_init(k, d_model, d_ff, dtype))(
+            jax.random.split(ku, n_experts)
+        ),
+        "w_down": jax.vmap(lambda k: dense_init(k, d_ff, d_model, dtype))(
+            jax.random.split(kd, n_experts)
+        ),
+    }
+
+
+def router_probs(params: Params, x: jax.Array) -> jax.Array:
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), params["router"]
+    )
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def moe_apply(
+    params: Params,
+    x: jax.Array,  # (B, S, d)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    return_aux: bool = False,
+) -> jax.Array | tuple[jax.Array, dict[str, jax.Array]]:
+    B, S, d = x.shape
+    E = params["router"].shape[1]
+    if S == 1:
+        out = _moe_dense_decode(params, x, top_k=top_k)
+        return (out, {}) if return_aux else out
+
+    probs = router_probs(params, x)  # (B, S, E) f32
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)  # (B, S, k)
+    # renormalize the selected gates (mixtral convention)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    C = int(max(1, -(-S * top_k // E) * capacity_factor))  # ceil * factor
+    C = min(C, S)
+
+    # position of each (token, k) entry within its expert's queue:
+    # flatten (S, k) in token-major order, cumulative count per expert.
+    flat_expert = expert_idx.reshape(B, S * top_k)  # (B, S*k)
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)  # (B, S*k, E)
+    pos_in_expert = jnp.cumsum(onehot, axis=1) - onehot  # (B, S*k, E)
+    pos = jnp.take_along_axis(
+        pos_in_expert, flat_expert[..., None], axis=-1
+    )[..., 0]  # (B, S*k)
+    keep = pos < C  # overflow dropped
+
+    # dispatch table: for every expert slot (e, c) the source token index
+    # (or S => padding row).
+    slot = flat_expert * C + pos  # (B, S*k) in [0, E*C)
+    token_of_entry = jnp.repeat(jnp.arange(S)[:, None], top_k, axis=1).reshape(-1)
+    dispatch = jnp.full((B, E * C), S, jnp.int32)
+    dispatch = jax.vmap(
+        lambda dsp, slt, kp: dsp.at[jnp.where(kp, slt, E * C)].set(
+            token_of_entry, mode="drop"
+        )
+    )(dispatch, slot, keep)
+
+    # gather tokens into expert-major layout (padding row of zeros at S)
+    x_pad = jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(
+        x_pad, dispatch[..., None], axis=1
+    )  # (B, E*C, d)
+    xe = constrain_expert_batch(xe.reshape(B, E, C, d))
+
+    # expert FFN (SwiGLU), expert-batched
+    g = jnp.einsum(
+        "becd,edf->becf", xe, params["w_gate"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    u = jnp.einsum(
+        "becd,edf->becf", xe, params["w_up"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    h = jax.nn.silu(g) * u
+    ye = constrain_expert_batch(
+        jnp.einsum(
+            "becf,efd->becd",
+            h,
+            params["w_down"],
+            preferred_element_type=jnp.float32,
+        ).astype(x.dtype)
+    )  # (B, E, C, d)
+
+    # combine: scatter-add each expert slot's output back to its token,
+    # weighted by its gate value.
+    gates_flat = (gate_vals.reshape(B, S * top_k) * keep).astype(x.dtype)
+    gate_of_slot = jnp.zeros((B, E * C), x.dtype)
+    gate_of_slot = jax.vmap(
+        lambda gs, slt, gv, kp: gs.at[jnp.where(kp, slt, E * C)].set(
+            gv, mode="drop"
+        )
+    )(gate_of_slot, slot, gates_flat, keep)
+    ye = ye.reshape(B, E * C, d) * gate_of_slot[..., None]
+    y = jnp.zeros((B, S + 1, d), x.dtype)
+    y = jax.vmap(lambda ya, dsp, yv: ya.at[dsp].add(yv, mode="drop"))(
+        y, dispatch, ye
+    )
+    y = constrain_batch(y[:, :S])
+
+    if not return_aux:
+        return y
+    # load-balancing auxiliary loss (Switch/GShard): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1))  # mean router prob per expert
+    fe = jnp.mean(
+        (jax.nn.one_hot(expert_idx, E).sum(axis=2) > 0).astype(jnp.float32),
+        axis=(0, 1),
+    )
+    aux = {
+        "load_balance_loss": E * jnp.sum(me * fe),
+        "overflow_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return y, aux
+
+
+def _moe_dense_decode(params: Params, x: jax.Array, *, top_k: int) -> jax.Array:
+    """Decode path: all experts computed, combined with top-k gates.
+    HBM bytes (the decode bottleneck) are identical to an ideal dispatch —
+    every expert's weights stream through once per step regardless."""
+    B, S, d = x.shape
+    E = params["router"].shape[1]
+    probs = router_probs(params, x)  # (B, 1, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+    mask = jnp.zeros((B, S, E), jnp.float32)
+    mask = jax.vmap(
+        jax.vmap(lambda m, idx, gv: m.at[idx].add(gv))
+    )(mask, expert_idx, gate_vals)  # (B, S, E) gate weight per expert
+
+    g = jnp.einsum(
+        "bsd,edf->bsef", x, params["w_gate"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    u = jnp.einsum(
+        "bsd,edf->bsef", x, params["w_up"], preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum(
+        "bsef,efd->bsed", h, params["w_down"], preferred_element_type=jnp.float32
+    )
+    return jnp.sum(y * mask[..., None].astype(y.dtype), axis=2).astype(x.dtype)
+
+
+def moe_reference(params: Params, x: jax.Array, *, top_k: int) -> jax.Array:
+    """Oracle: loop over tokens/experts densely (no capacity drops).
+    Matches moe_apply exactly when nothing overflows."""
+    B, S, d = x.shape
+    E = params["router"].shape[1]
+    probs = router_probs(params, x)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+    out = jnp.zeros_like(x)
+    for e in range(E):
+        g = jax.nn.silu(x @ params["w_gate"][e]) * (x @ params["w_up"][e])
+        ye = (g @ params["w_down"][e]).astype(x.dtype)
+        w = jnp.sum(
+            jnp.where(expert_idx == e, gate_vals, 0.0), axis=-1
+        )  # (B, S)
+        out = out + ye * w[..., None].astype(x.dtype)
+    return out

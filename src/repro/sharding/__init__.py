@@ -1,0 +1,5 @@
+"""Sharding: planner (PartitionSpec rules) + act (activation constraints).
+
+Import submodules directly (`from repro.sharding import planner`) — this
+package init stays import-free to avoid models<->planner cycles.
+"""

@@ -1,0 +1,66 @@
+"""Explicit activation sharding constraints (hillclimb H3.2).
+
+GSPMD's sharding propagation is heuristic, not cost-optimal: with FSDP'd
+weights it can decide to *unshard the global batch* (34 GB activation
+all-gathers per layer on jamba-398B) instead of the 50 MB per-layer weight
+gather FSDP intends. Pinning the batch axis of the residual stream at
+every layer boundary removes that degree of freedom — the partitioner is
+then forced into the weight-gather resolution.
+
+The constraint axes are process-global, set by the launcher (the model
+code stays mesh-agnostic); outside a mesh context this is a no-op, so
+tests and single-device examples are untouched.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES: tuple[str, ...] | None = None
+_MODEL_AXIS: tuple[str, int] | None = None  # (name, size)
+
+
+def set_batch_axes(axes: tuple[str, ...] | None) -> None:
+    global _BATCH_AXES
+    _BATCH_AXES = axes
+
+
+def set_model_axis(name: str | None, size: int = 0) -> None:
+    global _MODEL_AXIS
+    _MODEL_AXIS = (name, size) if name else None
+
+
+def get_batch_axes() -> tuple[str, ...] | None:
+    return _BATCH_AXES
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Pin dim0 = batch to the configured axes; other dims unconstrained."""
+    if _BATCH_AXES is None or x.ndim < 2:
+        return x
+    if x.shape[0] == 1:  # unshardable batch (long_500k)
+        return x
+    spec = [None] * x.ndim
+    spec[0] = _BATCH_AXES
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:  # no mesh context (CPU tests) — no-op
+        return x
+
+
+def constrain_expert_batch(x: jax.Array) -> jax.Array:
+    """Pin (B, E, C, d)-shaped dispatched MoE tensors: batch on the data
+    axes AND experts on the model axis (expert parallelism), so neither
+    the dispatch gather nor its backward can unshard either dim
+    (hillclimb H3.3)."""
+    if _BATCH_AXES is None or x.ndim < 3:
+        return x
+    spec = [None] * x.ndim
+    if x.shape[0] > 1:
+        spec[0] = _BATCH_AXES
+    if _MODEL_AXIS is not None and _MODEL_AXIS[1] and x.shape[1] % _MODEL_AXIS[1] == 0:
+        spec[1] = _MODEL_AXIS[0]
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x

@@ -1,0 +1,348 @@
+"""Sharding planner: rule-based PartitionSpecs with divisibility fallbacks.
+
+Given an ArchConfig and a mesh, produce NamedShardings for every leaf of
+the param pytree, optimizer state, input batch and decode cache. The rules
+implement the policy documented in DESIGN.md §5:
+
+* Megatron-style tensor parallelism on the `model` axis wherever the
+  natural dimension is divisible (head-boundary-safe for attention);
+* graceful fallbacks when it is not (gemma3's 4 heads, mixtral's 8
+  experts, xlstm's width): replicate or shard an alternative dimension —
+  never crash, never silently mis-shard;
+* optional FSDP (`fsdp=True`, auto-enabled for >=20B-param configs):
+  params/moments additionally sharded over `data` on a secondary
+  dimension; XLA inserts the per-layer all-gathers (ZeRO-3 semantics);
+* serve mode: weights may also use the `data` axis (requests are
+  replicated reads — there is no gradient to sync), which is what lets
+  141B/398B checkpoints fit 256 x 16 GB chips during decode;
+* KV caches: batch on `data` when divisible; heads on `model` when
+  divisible, else cache *sequence* on `model` (flash-decoding layout),
+  else replicate.
+
+The planner is pure metadata: it never touches device buffers.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.model import ArchConfig
+
+
+# --------------------------------------------------------------------- #
+# helpers                                                               #
+# --------------------------------------------------------------------- #
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 0
+
+
+def _dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Axes that carry the batch: ('pod','data') on multi-pod meshes."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in _dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _try(spec: list, dim: int, size: int, axis: str, mesh: Mesh, used: set) -> bool:
+    """Assign `axis` to `dim` if divisible and axis unused."""
+    asize = _axis_size(mesh, axis)
+    if asize and size % asize == 0 and axis not in used:
+        spec[dim] = axis
+        used.add(axis)
+        return True
+    return False
+
+
+def _widen(spec: list, dim: int, size: int, mesh: Mesh, used: set) -> bool:
+    """Extend a 'model'-sharded dim to ('model','data'): FSDP/serve weight
+    storage sharding that keeps contraction dims whole, so GSPMD's only
+    sane resolution is the cheap per-layer weight all-gather — never the
+    batch-gather + giant partial-sum all-reduce (hillclimb H3.1)."""
+    d_ax = _axis_size(mesh, "data")
+    m_ax = _axis_size(mesh, "model")
+    if (
+        spec[dim] == "model"
+        and d_ax
+        and "data" not in used
+        and size % (d_ax * m_ax) == 0
+    ):
+        spec[dim] = ("model", "data")
+        used.add("data")
+        return True
+    return False
+
+
+def _mk(spec: list) -> P:
+    return P(*spec)
+
+
+# --------------------------------------------------------------------- #
+# parameter rules                                                       #
+# --------------------------------------------------------------------- #
+def _param_spec(
+    path: tuple[str, ...],
+    shape: tuple[int, ...],
+    cfg: ArchConfig,
+    mesh: Mesh,
+    *,
+    fsdp: bool,
+    serve: bool,
+) -> P:
+    name = path[-1]
+    stacked = "groups" in path  # leading `repeats` dim
+    base = 1 if stacked else 0
+    nd = len(shape)
+    spec: list = [None] * nd
+    used: set[str] = set()
+    model = _axis_size(mesh, "model")
+
+    def dim_size(i: int) -> int:
+        return shape[base + i]
+
+    def sd(i: int) -> int:  # absolute dim index
+        return base + i
+
+    in_attn = "mixer" in path and name in (
+        "wq", "wk", "wv", "wo", "wz", "w_igate", "w_fgate",
+    )
+    in_moe = name in ("router", "w_gate", "w_up", "w_down") and (
+        nd - base == 3 or name == "router"
+    )
+
+    if name == "embed":
+        _try(spec, sd(0), dim_size(0), "model", mesh, used)  # vocab
+        if fsdp or serve:
+            _widen(spec, sd(0), dim_size(0), mesh, used) or _try(
+                spec, sd(1), dim_size(1), "data", mesh, used
+            )
+    elif name == "lm_head":
+        _try(spec, sd(1), dim_size(1), "model", mesh, used)  # vocab (xK)
+        if fsdp or serve:
+            _widen(spec, sd(1), dim_size(1), mesh, used) or _try(
+                spec, sd(0), dim_size(0), "data", mesh, used
+            )
+    elif in_attn and name in ("wq", "wz"):
+        # output is heads*head_dim: shard only on head boundaries
+        if model and cfg.n_heads % model == 0:
+            _try(spec, sd(1), dim_size(1), "model", mesh, used)
+        if fsdp or serve:
+            # widen the model-sharded dim; if the tensor could not use the
+            # model axis at all (head-count fallback), store it data-
+            # sharded instead of fully replicated — activations are pinned
+            # (sharding/act.py), so the batch-unshard pathology is blocked.
+            _widen(spec, sd(1), dim_size(1), mesh, used) or _try(
+                spec, sd(0), dim_size(0), "data", mesh, used
+            )
+    elif in_attn and name in ("wk", "wv"):
+        if model and cfg.n_kv_heads % model == 0:
+            _try(spec, sd(1), dim_size(1), "model", mesh, used)
+        if fsdp or serve:
+            _widen(spec, sd(1), dim_size(1), mesh, used) or _try(
+                spec, sd(0), dim_size(0), "data", mesh, used
+            )
+    elif in_attn and name == "wo":
+        if model and cfg.n_heads % model == 0:
+            _try(spec, sd(0), dim_size(0), "model", mesh, used)
+        if fsdp or serve:
+            _widen(spec, sd(0), dim_size(0), mesh, used) or _try(
+                spec, sd(1), dim_size(1), "data", mesh, used
+            )
+    elif in_attn:  # w_igate / w_fgate: tiny
+        pass
+    elif in_moe and name == "router":
+        pass  # (d, E) tiny, replicated
+    elif in_moe and name in ("w_gate", "w_up"):
+        # (E, d, f)
+        if model and cfg.moe_experts % model == 0:
+            _try(spec, sd(0), dim_size(0), "model", mesh, used)
+            if fsdp or serve:
+                _try(spec, sd(2), dim_size(2), "data", mesh, used)
+        else:
+            _try(spec, sd(2), dim_size(2), "model", mesh, used)
+            if fsdp or serve:
+                _widen(spec, sd(2), dim_size(2), mesh, used)
+    elif in_moe and name == "w_down":
+        # (E, f, d)
+        if model and cfg.moe_experts % model == 0:
+            _try(spec, sd(0), dim_size(0), "model", mesh, used)
+            if fsdp or serve:
+                _try(spec, sd(1), dim_size(1), "data", mesh, used)
+        else:
+            _try(spec, sd(1), dim_size(1), "model", mesh, used)
+            if fsdp or serve:
+                _widen(spec, sd(1), dim_size(1), mesh, used)
+    elif name in ("w_gate", "w_up"):  # dense SwiGLU (d, ff)
+        _try(spec, sd(1), dim_size(1), "model", mesh, used)
+        if fsdp or serve:
+            _widen(spec, sd(1), dim_size(1), mesh, used)
+    elif name == "w_down":  # dense SwiGLU (ff, d)
+        _try(spec, sd(0), dim_size(0), "model", mesh, used)
+        if fsdp or serve:
+            _widen(spec, sd(0), dim_size(0), mesh, used)
+    elif name == "in_proj":  # mamba (d, 2*inner)
+        _try(spec, sd(1), dim_size(1), "model", mesh, used)
+        if fsdp or serve:
+            _widen(spec, sd(1), dim_size(1), mesh, used)
+    elif name == "conv_w":  # (K, inner)
+        _try(spec, sd(1), dim_size(1), "model", mesh, used)
+    elif name in ("conv_b", "dt_bias", "D"):  # (inner,)
+        _try(spec, sd(0), dim_size(0), "model", mesh, used)
+    elif name in ("x_proj", "A_log"):  # (inner, ...)
+        _try(spec, sd(0), dim_size(0), "model", mesh, used)
+    elif name == "dt_proj":  # (dt_rank, inner)
+        _try(spec, sd(1), dim_size(1), "model", mesh, used)
+    elif name == "out_proj":  # mamba (inner, d)
+        _try(spec, sd(0), dim_size(0), "model", mesh, used)
+        if fsdp or serve:
+            _widen(spec, sd(0), dim_size(0), mesh, used)
+    elif name == "w_in":  # slstm (d, 4d) — gate/head boundary: replicate
+        if fsdp or serve:
+            _try(spec, sd(0), dim_size(0), "data", mesh, used)
+    elif name in ("r_z", "r_i", "r_f", "r_o"):
+        pass
+    elif name in ("r_z", "r_i", "r_f", "r_o"):  # slstm (H, D, D)
+        pass
+    # norms / biases / scalars: replicated
+    return _mk(spec)
+
+
+def param_shardings(
+    cfg: ArchConfig,
+    params_shapes: Any,  # pytree of ShapeDtypeStruct
+    mesh: Mesh,
+    *,
+    fsdp: bool | None = None,
+    serve: bool = False,
+) -> Any:
+    leaves = jax.tree.leaves(params_shapes)
+    total_bytes = sum(x.size * jnp.dtype(x.dtype).itemsize for x in leaves)
+    if fsdp is None:
+        fsdp = total_bytes > 4e9 * _axis_size(mesh, "model")  # >4GB/chip
+    if serve:
+        # 2D weight sharding only when the model axis alone cannot hold
+        # the weights (<=8GB/chip budget): small archs keep weights
+        # model-sharded + data-replicated, so decode never gathers them
+        # (hillclimb H2/H3 — see EXPERIMENTS.md §Perf).
+        serve = total_bytes > 8e9 * _axis_size(mesh, "model")
+
+    def one(path, leaf):
+        keys = tuple(
+            p.key if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path
+        )
+        spec = _param_spec(
+            keys, leaf.shape, cfg, mesh, fsdp=fsdp, serve=serve
+        )
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def opt_shardings(param_sh: Any, opt_shapes: Any, mesh: Mesh) -> Any:
+    """Moments mirror their parameter's sharding; scalars replicated."""
+    def like(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        # path = ('m'|'v', *param_path) — strip the first key
+        sub = param_sh
+        for p in path[1:]:
+            key = p.key if hasattr(p, "key") else p.idx
+            sub = sub[key]
+        return sub
+
+    return jax.tree_util.tree_map_with_path(like, opt_shapes)
+
+
+# --------------------------------------------------------------------- #
+# batch + cache rules                                                   #
+# --------------------------------------------------------------------- #
+def batch_shardings(
+    batch_shapes: Any, mesh: Mesh, *, replicate: bool = False
+) -> Any:
+    """replicate=True: leave the batch unsharded — used for wide-serve
+    decode where the data axis is spent on weight storage and activations
+    are tiny (B x 1 x d)."""
+    dp = _dp_axes(mesh)
+    dpn = _dp_size(mesh)
+
+    def one(leaf):
+        spec: list = [None] * leaf.ndim
+        if (
+            not replicate
+            and leaf.ndim >= 1
+            and leaf.shape[0] % dpn == 0
+            and leaf.shape[0] > 0
+        ):
+            spec[0] = dp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_shardings(cfg: ArchConfig, cache_shapes: Any, mesh: Mesh) -> Any:
+    dp = _dp_axes(mesh)
+    dpn = _dp_size(mesh)
+    model = _axis_size(mesh, "model")
+
+    def one(path, leaf):
+        keys = [p.key if hasattr(p, "key") else str(getattr(p, "idx", p)) for p in path]
+        name = keys[-1] if keys else ""
+        if leaf.ndim == 0:  # position scalar
+            return NamedSharding(mesh, P())
+        spec: list = [None] * leaf.ndim
+        used: set[str] = set()
+        # dim 0 is the stacked `repeats` axis; dim 1 is batch
+        if leaf.ndim >= 2 and leaf.shape[1] % dpn == 0:
+            spec[1] = dp
+            used.add("data")
+            used.add("pod")
+        wide = spec[1] is None  # batch unshardable: use every axis we can
+        if name in ("k", "v") and leaf.ndim == 5:
+            # (repeats, B, L, KV, hd)
+            if model and leaf.shape[3] % model == 0 and not wide:
+                spec[3] = "model"
+            elif wide and model and leaf.shape[2] % (dpn * model) == 0:
+                spec[2] = (*dp, "model")  # 2D sequence-sharded cache
+            elif model and leaf.shape[2] % model == 0:
+                spec[2] = "model"  # sequence-sharded cache
+        elif name in ("ssm",) and leaf.ndim == 4:  # (r, B, inner, state)
+            if wide and model and leaf.shape[2] % (dpn * model) == 0:
+                spec[2] = (*dp, "model")
+            else:
+                _try(spec, 2, leaf.shape[2], "model", mesh, used)
+        elif name == "conv" and leaf.ndim == 4:  # (r, B, K-1, inner)
+            _try(spec, 3, leaf.shape[3], "model", mesh, used)
+        elif name == "C" and leaf.ndim == 5:  # (r, B, H, D, D)
+            _try(spec, 3, leaf.shape[3], "model", mesh, used)
+        elif name in ("n", "c", "h", "m") and leaf.ndim == 4:  # (r, B, H, D)
+            _try(spec, 3, leaf.shape[3], "model", mesh, used)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def describe(sh_tree: Any) -> dict[str, str]:
+    """Flat {path: spec} map for logging/EXPERIMENTS.md."""
+    out = {}
+
+    def one(path, sh):
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p))
+            for p in path
+        )
+        out[key] = str(sh.spec)
+
+    jax.tree_util.tree_map_with_path(one, sh_tree)
+    return out

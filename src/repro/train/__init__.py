@@ -1,0 +1,7 @@
+from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
+from repro.train.train_step import init_train_state, make_train_step
+
+__all__ = [
+    "OptimizerConfig", "adamw_update", "init_opt_state", "init_train_state",
+    "make_train_step",
+]

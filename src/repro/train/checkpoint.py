@@ -1,0 +1,93 @@
+"""Checkpoint/restart THROUGH the AutoSPADA control plane.
+
+This is the paper's resiliency mechanism applied to training (DESIGN.md
+§2): a training job is an *assignment*; each pod-host is a platform
+*client*; a checkpoint is an *intermediate result* that is cached locally
+until the server acknowledges it as recorded — after which the step is
+durable. A restarted (preempted) pod fetches its state snapshot, reads the
+latest acknowledged checkpoint id from the task's results, and resumes
+from the matching blob.
+
+Tensor payloads live in a blob store (filesystem here; GCS/S3 in a real
+deployment) — only metadata + logical clocks flow through the document
+store, the same split the paper makes between MongoDB documents and bulk
+results.
+"""
+from __future__ import annotations
+
+import json
+import pickle
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+class BlobStore:
+    """Content-addressed tensor blobs on disk."""
+
+    def __init__(self, root: str | Path):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    def put(self, name: str, tree: Any) -> str:
+        leaves, treedef = jax.tree.flatten(tree)
+        path = self.root / f"{name}.npz"
+        np.savez(
+            path, **{f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+        )
+        (self.root / f"{name}.treedef.pkl").write_bytes(pickle.dumps(treedef))
+        return name
+
+    def get(self, name: str) -> Any:
+        data = np.load(self.root / f"{name}.npz")
+        treedef = pickle.loads(
+            (self.root / f"{name}.treedef.pkl").read_bytes()
+        )
+        leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
+        return jax.tree.unflatten(treedef, leaves)
+
+    def exists(self, name: str) -> bool:
+        return (self.root / f"{name}.npz").exists()
+
+
+class CheckpointManager:
+    """Ties a training client's checkpoints to the platform lifecycle.
+
+    save(): write blob -> publish {step, blob} as a task result (buffered
+    on the client's LocalDisk until the server confirms — the paper's
+    §3.3.1 guarantee, so a crash between blob write and ack replays the
+    publication, and a crash before blob write simply loses the step).
+
+    latest(): read the task's acknowledged results from the server and
+    return the newest checkpoint whose blob exists.
+    """
+
+    def __init__(self, blob_store: BlobStore, client, task_id: str):
+        self.blobs = blob_store
+        self.client = client  # EdgeClient of this pod-host
+        self.task_id = task_id
+
+    def save(self, step: int, state: Any) -> str:
+        name = f"{self.task_id}-step{step:08d}"
+        self.blobs.put(name, state)
+        # Publish through the sync loop: result -> dirty/submit path.
+        self.client._on_container_event(
+            self.task_id, result_value={"kind": "checkpoint", "step": step, "blob": name}
+        )
+        self.client.run_until_idle()
+        return name
+
+    def latest(self, server) -> tuple[int, Any] | None:
+        results = server.results(self.task_id)
+        best: tuple[int, str] | None = None
+        for r in results:
+            v = r.value
+            if isinstance(v, dict) and v.get("kind") == "checkpoint":
+                if self.blobs.exists(v["blob"]):
+                    if best is None or v["step"] > best[0]:
+                        best = (v["step"], v["blob"])
+        if best is None:
+            return None
+        return best[0], self.blobs.get(best[1])

@@ -1,0 +1,112 @@
+"""Optimizers with memory-footprint control for 100B+ configs.
+
+AdamW with configurable moment dtype: the 398B/141B models cannot hold
+f32 moments + f32 master weights in 16 GB/chip HBM even fully sharded
+(4.8 TB of optimizer state at 12 B/param). The production recipe used
+here: bf16 stored params, bf16 moments, f32 update math per step
+(cast up, update, cast down). The EXPERIMENTS.md memory table records the
+per-device budget for every cell.
+
+`adafactor` (factored second moment) is provided as the lower-memory
+alternative for ablations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float | None = 1.0
+    moment_dtype: str = "float32"  # bf16 for >=100B configs
+    warmup_steps: int = 100
+    kind: str = "adamw"  # adamw | adafactor
+
+    @property
+    def mdtype(self):
+        return jnp.dtype(self.moment_dtype)
+
+
+def init_opt_state(cfg: OptimizerConfig, params: Params) -> dict[str, Any]:
+    if cfg.kind == "adamw":
+        zeros = lambda p: jnp.zeros(p.shape, cfg.mdtype)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+    if cfg.kind == "adafactor":
+        def facto(p):
+            if p.ndim < 2:
+                return {"v": jnp.zeros(p.shape, jnp.float32)}
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {
+            "f": jax.tree.map(facto, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(cfg.kind)
+
+
+def _lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    return cfg.learning_rate * warm
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> tuple[Params, jax.Array]:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    cfg: OptimizerConfig,
+    params: Params,
+    grads: Params,
+    opt_state: dict[str, Any],
+) -> tuple[Params, dict[str, Any], dict[str, jax.Array]]:
+    step = opt_state["step"] + 1
+    grad_norm = jnp.float32(0.0)
+    if cfg.grad_clip_norm is not None:
+        grads, grad_norm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    lr = _lr_at(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m32.astype(cfg.mdtype), v32.astype(cfg.mdtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": grad_norm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

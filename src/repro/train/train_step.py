@@ -1,0 +1,81 @@
+"""Train step: loss -> grad -> AdamW, with optional gradient accumulation.
+
+The step function is pure (state, batch) -> (state, metrics); pjit handles
+distribution via the planner's in/out shardings. Remat lives inside the
+model (per pattern-block `jax.checkpoint` around each scan body).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ArchConfig, init_params, train_loss
+from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
+
+TrainState = dict[str, Any]  # {"params": ..., "opt": ..., "step": scalar}
+
+
+def init_train_state(
+    cfg: ArchConfig, opt_cfg: OptimizerConfig, key: jax.Array
+) -> TrainState:
+    params = init_params(cfg, key)
+    return {"params": params, "opt": init_opt_state(opt_cfg, params)}
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptimizerConfig, microbatches: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    `microbatches > 1` splits the per-step batch on the leading axis and
+    accumulates grads in f32 with a lax.scan (sequential microbatching —
+    the standard trick when the global batch does not fit activations).
+    """
+
+    def loss_fn(params, batch):
+        loss, metrics = train_loss(params, cfg, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single_grads(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch: dict[str, jax.Array]):
+        params = state["params"]
+        if microbatches == 1:
+            loss, metrics, grads = single_grads(params, batch)
+        else:
+            def reshape(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(reshape, batch)
+
+            def acc_step(carry, mbatch):
+                acc, loss_acc = carry
+                loss, _, grads = single_grads(params, mbatch)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads
+                )
+                return (acc, loss_acc + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, loss_sum), _ = jax.lax.scan(
+                acc_step, (zeros, jnp.float32(0.0)), mb
+            )
+            grads = jax.tree.map(lambda g: (g / microbatches), gsum)
+            loss = loss_sum / microbatches
+            metrics = {"nll": loss, "moe_aux": jnp.float32(0.0)}
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, params, grads, state["opt"]
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

@@ -1,0 +1,73 @@
+"""Infrastructure units: blob store, data pipeline determinism, HLO
+collective parsing, wire-format codecs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_tiny
+from repro.data.pipeline import host_shard, synthetic_batch
+from repro.train.checkpoint import BlobStore
+
+
+def test_blobstore_roundtrip(tmp_path):
+    store = BlobStore(tmp_path)
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((2,), jnp.int32)},
+    }
+    store.put("ckpt-1", tree)
+    back = store.get("ckpt-1")
+    assert np.array_equal(back["a"], tree["a"])
+    assert np.array_equal(back["b"]["c"], tree["b"]["c"])
+    assert store.exists("ckpt-1") and not store.exists("ckpt-2")
+
+
+def test_pipeline_deterministic_and_shardable():
+    cfg = get_tiny("granite-8b")
+    b1 = synthetic_batch(cfg, batch=8, seq=32, seed=7, step=3)
+    b2 = synthetic_batch(cfg, batch=8, seq=32, seed=7, step=3)
+    b3 = synthetic_batch(cfg, batch=8, seq=32, seed=7, step=4)
+    assert np.array_equal(b1["tokens"], b2["tokens"])  # (seed, step) pure
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # host shards tile the global batch
+    shards = [host_shard(b1, i, 4)["tokens"] for i in range(4)]
+    assert np.array_equal(np.concatenate(shards), b1["tokens"])
+    # labels are next-token shifted with a masked tail
+    assert np.array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+    assert (np.asarray(b1["labels"][:, -1]) == -1).all()
+
+
+def test_pipeline_multimodal_shapes():
+    vlm = get_tiny("internvl2-26b")
+    b = synthetic_batch(vlm, batch=2, seq=32, seed=0, step=0)
+    assert b["patch_embeds"].shape == (2, vlm.n_patches, vlm.d_model)
+    au = get_tiny("musicgen-large")
+    b = synthetic_batch(au, batch=2, seq=32, seed=0, step=0)
+    assert b["frame_embeds"].shape == (2, 32, au.d_model)
+    assert b["labels"].shape == (2, 32, au.n_codebooks)
+
+
+def test_collective_parser():
+    import importlib.util, pathlib
+
+    spec = importlib.util.spec_from_file_location(
+        "_dry", pathlib.Path("src/repro/launch/dryrun.py")
+    )
+    # parse functions without executing module-level XLA device locking:
+    src = pathlib.Path("src/repro/launch/dryrun.py").read_text()
+    ns: dict = {}
+    import re as _re
+
+    block = src[src.index("_DTYPE_BYTES") : src.index("def sharded_bytes")]
+    exec("import re\n" + block, ns)
+    hlo = """
+  %all-gather.1 = f32[8,128]{1,0} all-gather(%x), replica_groups={}
+  %all-reduce.2 = (bf16[4,4]{1,0}, bf16[4,4]{1,0}) all-reduce(%a, %b)
+  %all-reduce-start.9 = f32[16]{0} all-reduce-start(%y)
+  %all-reduce-done.9 = f32[16]{0} all-reduce-done(%q)
+  %add.1 = f32[2]{0} add(%p, %q)
+"""
+    out = ns["collective_bytes"](hlo)
+    assert out["all-gather"] == 8 * 128 * 4
+    assert out["all-reduce"] == 2 * 16 * 2 + 16 * 4  # tuple + start, no -done
+    assert out["total"] == out["all-gather"] + out["all-reduce"]

@@ -1,0 +1,230 @@
+"""Property-based tests of the Algorithm-1 sync loop (hypothesis).
+
+The paper's resiliency claims, made mechanical: under ANY interleaving of
+  * user actions (assign / cancel),
+  * client event-pump and op-execution steps,
+  * dropped QoS-0 notifications,
+  * RPC failures (including submit acks lost AFTER the server applied the
+    write — the worst case for duplication),
+  * client crashes/restarts (volatile state lost, LocalDisk survives),
+the platform must converge once the network heals:
+  I1  every task reaches a terminal state;
+  I2  FINISHED tasks have exactly the results their payload published —
+      nothing lost, nothing duplicated, in order;
+  I3  per-client logical clocks only ever increase;
+  I4  the client ends fully synced (no unacked results for terminal tasks).
+"""
+from __future__ import annotations
+
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    Broker,
+    EdgeClient,
+    FaultPlan,
+    FlakyServer,
+    LocalDisk,
+    TaskStatus,
+    User,
+    make_platform,
+)
+
+PAYLOADS = [
+    # (source, expected results, expected status)
+    (
+        "import autospada\nautospada.publish({'v': 1})\n",
+        [{"v": 1}],
+        TaskStatus.FINISHED,
+    ),
+    (
+        "import autospada\nfor i in range(3):\n    autospada.publish({'i': i})\n",
+        [{"i": 0}, {"i": 1}, {"i": 2}],
+        TaskStatus.FINISHED,
+    ),
+    (
+        "import autospada\nautospada.publish({'v': 1})\nraise ValueError('x')\n",
+        [{"v": 1}],
+        TaskStatus.ERROR,
+    ),
+    (
+        "import autospada\n"
+        "s = autospada.load_state()\n"
+        "n = 0 if s is None else s['n']\n"
+        "autospada.cache_state({'n': n + 1})\n"
+        "autospada.publish({'n': n + 1})\n",
+        None,  # restart-dependent: checked structurally
+        TaskStatus.FINISHED,
+    ),
+]
+
+event_st = st.one_of(
+    st.tuples(st.just("assign"), st.integers(0, len(PAYLOADS) - 1)),
+    st.tuples(st.just("cancel"), st.integers(0, 7)),
+    st.tuples(st.just("poll"), st.just(0)),
+    st.tuples(st.just("step"), st.just(0)),
+    st.tuples(st.just("restart"), st.just(0)),
+    st.tuples(st.just("fail_rpcs"), st.integers(1, 3)),
+    st.tuples(st.just("drop_notifications"), st.integers(1, 2)),
+)
+
+
+@settings(
+    max_examples=60,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+@given(events=st.lists(event_st, min_size=1, max_size=40))
+def test_sync_loop_converges_under_chaos(events):
+    drops = {"n": 0}
+    faults = FaultPlan(drop=lambda m: _take(drops))
+    store, broker, (server,) = make_platform(broker=Broker(faults))
+    fail_budget = {"n": 0}
+    flaky = FlakyServer(server, lambda method, i: _take(fail_budget))
+
+    clocks: dict[str, int] = {}
+
+    def watch(cid, clock):
+        assert clock > clocks.get(cid, 0), "I3: clock must be monotone"
+        clocks[cid] = clock
+
+    store.watch_clocks(watch)
+
+    disk = LocalDisk()
+    client = EdgeClient("veh", flaky, broker, disk=disk)
+    client.bootstrap()
+    user = User(server, broker)
+    assignments = []
+
+    for ev, arg in events:
+        if ev == "assign":
+            payload = user.payload(PAYLOADS[arg][0])
+            a = user.assignment(f"a{len(assignments)}", [user.task("veh", payload)])
+            a.commit()
+            assignments.append((a, arg))
+        elif ev == "cancel" and assignments:
+            a, _ = assignments[arg % len(assignments)]
+            a.cancel()
+        elif ev == "poll":
+            client.poll()
+        elif ev == "step":
+            client.step()
+        elif ev == "restart":
+            client.shutdown()
+            client = EdgeClient("veh", flaky, broker, disk=disk)
+            client.bootstrap()
+        elif ev == "fail_rpcs":
+            fail_budget["n"] += arg
+        elif ev == "drop_notifications":
+            drops["n"] += arg
+
+    # network heals; client dials in; world quiesces
+    fail_budget["n"] = 0
+    drops["n"] = 0
+    client.resync()
+    client.run_until_idle()
+    client.resync()
+    client.run_until_idle()
+
+    for a, pidx in assignments:
+        source, expected, status = PAYLOADS[pidx]
+        task_id = a.tasks[0].task_id
+        task = server.task(task_id)
+        # I1: terminal
+        assert task.status != TaskStatus.ACTIVE, "I1: task still active"
+        results = [r.value for r in server.results(task_id)]
+        if task.status == TaskStatus.FINISHED:
+            if expected is not None:
+                # I2: exactly-once, in order
+                assert results == expected, "I2 violated"
+            else:
+                # restartable counter payload: monotone 'n', no dups
+                ns = [r["n"] for r in results]
+                assert ns == sorted(set(ns)), "I2 violated (restart payload)"
+        elif task.status == TaskStatus.CANCELED:
+            # canceled before/while running: recorded results must still be
+            # a prefix of the payload's publications
+            if expected is not None:
+                assert results == expected[: len(results)]
+    # I4: nothing left unacknowledged for terminal tasks
+    for task_id in list(disk.unacked):
+        assert server.task(task_id).status == TaskStatus.ACTIVE
+
+
+def _take(budget: dict) -> bool:
+    if budget["n"] > 0:
+        budget["n"] -= 1
+        return True
+    return False
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_results=st.integers(1, 5),
+    fail_after=st.integers(1, 6),
+)
+def test_lost_submit_ack_never_duplicates(n_results, fail_after):
+    """Submit applied server-side but ack lost => client retries => the
+    (task_id, seq) idempotency must keep results exactly-once."""
+    store, broker, (server,) = make_platform()
+    calls = {"n": 0}
+
+    def should_fail(method, i):
+        if method == "submit":
+            calls["n"] += 1
+            return calls["n"] == fail_after
+        return False
+
+    flaky = FlakyServer(server, should_fail)
+    client = EdgeClient("veh", flaky, broker)
+    client.bootstrap()
+    client.run_until_idle()
+    user = User(server, broker)
+    src = "import autospada\n" + "".join(
+        f"autospada.publish({{'i': {i}}})\n" for i in range(n_results)
+    )
+    a = user.assignment("x", [user.task("veh", user.payload(src))]).commit()
+    client.run_until_idle()
+    client.resync()
+    client.run_until_idle()
+    task_id = a.tasks[0].task_id
+    results = [r.value for r in server.results(task_id)]
+    assert results == [{"i": i} for i in range(n_results)]
+    assert server.task(task_id).status == TaskStatus.FINISHED
+
+
+@settings(max_examples=30, deadline=None)
+@given(crash_point=st.integers(0, 3))
+def test_restart_resumes_from_cached_state(crash_point):
+    """The §5.1 histogram argument: cached state makes the counter resume
+    monotonically across crashes instead of restarting from zero."""
+    store, broker, (server,) = make_platform()
+    disk = LocalDisk()
+    client = EdgeClient("veh", server, broker, disk=disk)
+    client.bootstrap()
+    client.run_until_idle()
+    user = User(server, broker)
+    src = (
+        "import autospada\n"
+        "s = autospada.load_state()\n"
+        "n = 0 if s is None else s['n']\n"
+        "autospada.cache_state({'n': n + 1})\n"
+        "autospada.publish({'n': n + 1})\n"
+    )
+    a = user.assignment("h", [user.task("veh", user.payload(src))]).commit()
+    for i in range(crash_point):
+        client.poll()
+        client.step()
+    client.shutdown()
+    client = EdgeClient("veh", server, broker, disk=disk)
+    client.bootstrap()
+    client.run_until_idle()
+    client.resync()
+    client.run_until_idle()
+    task_id = a.tasks[0].task_id
+    task = server.task(task_id)
+    assert task.status == TaskStatus.FINISHED
+    ns = [r.value["n"] for r in server.results(task_id)]
+    assert ns == sorted(set(ns))  # monotone, no duplicates
+    # state cache is removed on completion (paper §5.1)
+    assert task_id not in disk.task_state

@@ -1,0 +1,169 @@
+"""End-to-end platform behaviour (paper §5 workflow, §4.1.1 lifecycle)."""
+import pytest
+
+from repro.core import (
+    EdgeClient,
+    FlakyServer,
+    LocalDisk,
+    ResourceLimits,
+    ScriptedSignalBroker,
+    Server,
+    TaskStatus,
+    User,
+    make_platform,
+)
+from repro.core.signals import constant
+
+MEAN_PAYLOAD = """
+import autospada
+p = autospada.get_parameters()
+total = 0.0
+for i in range(p["n"]):
+    total += autospada.get_signal(p["signal_name"])
+autospada.publish({"mean": total / p["n"]})
+"""
+
+
+def make_world(n_vehicles=2, n_servers=1, signal_value=17.0):
+    store, broker, servers = make_platform(n_servers=n_servers)
+    clients = []
+    for i in range(n_vehicles):
+        sig = ScriptedSignalBroker({"Vehicle.Speed": constant(signal_value)})
+        c = EdgeClient(f"veh-{i}", servers[i % len(servers)], broker, signal_broker=sig)
+        c.bootstrap()
+        c.run_until_idle()
+        clients.append((c, sig))
+    user = User(servers[0], broker)
+
+    def pump():
+        for c, sig in clients:
+            sig.tick()
+            c.run_until_idle()
+
+    return store, broker, servers, clients, user, pump
+
+
+def test_listing1_mean_speed_workflow():
+    """The paper's §5.2.1 workflow end to end."""
+    store, broker, servers, clients, user, pump = make_world()
+    payload = user.payload(MEAN_PAYLOAD, name="mean-speed")
+    params = user.parameter({"n": 5, "signal_name": "Vehicle.Speed"})
+    tasks = [user.task(c, payload, params) for c in user.online_clients()]
+    assign = user.assignment("Mean speed", tasks)
+    results = assign.commit().await_results(pump)
+    assert len(results) == 2
+    for values in results.values():
+        assert values == [{"mean": 17.0}]
+    assert all(s == "FINISHED" for s in assign.statuses().values())
+
+
+def test_error_status_uploads_container_log():
+    store, broker, servers, clients, user, pump = make_world(n_vehicles=1)
+    bad = user.payload("import autospada\nraise ValueError('boom')\n")
+    assign = user.assignment("bad", [user.task("veh-0", bad)]).commit()
+    pump()
+    task_id = assign.tasks[0].task_id
+    task = servers[0].task(task_id)
+    assert task.status == TaskStatus.ERROR
+    assert "boom" in task.error_log
+
+
+def test_cancel_semantics():
+    """Only ACTIVE tasks can be canceled; cancel stops the container."""
+    store, broker, servers, clients, user, pump = make_world(n_vehicles=1)
+    done = user.payload("import autospada\nautospada.publish({'x': 1})\n")
+    assign = user.assignment("d", [user.task("veh-0", done)]).commit()
+    pump()
+    assert assign.cancel() == 0  # already FINISHED -> not cancelable
+    # an assignment canceled before any client syncs never runs
+    a2 = user.assignment("never", [user.task("veh-0", done)])
+    a2.commit()
+    assert a2.cancel() == 1
+    pump()
+    assert servers[0].task(a2.tasks[0].task_id).status == TaskStatus.CANCELED
+    assert servers[0].results(a2.tasks[0].task_id) == []
+
+
+def test_stateless_servers_interchangeable():
+    """Any server instance serves any request (paper §3.2): round-robin
+    every call across three instances."""
+    store, broker, servers, clients, user, pump = make_world(n_servers=3)
+
+    class RoundRobin:
+        def __init__(self, servers):
+            self._servers = servers
+            self._i = 0
+
+        def __getattr__(self, name):
+            s = self._servers[self._i % len(self._servers)]
+            self._i += 1
+            return getattr(s, name)
+
+    rr_user = User(RoundRobin(servers), broker)
+    payload = rr_user.payload(MEAN_PAYLOAD)
+    params = rr_user.parameter({"n": 2, "signal_name": "Vehicle.Speed"})
+    tasks = [rr_user.task(c, payload, params) for c in rr_user.online_clients()]
+    results = rr_user.assignment("rr", tasks).commit().await_results(pump)
+    assert all(v == [{"mean": 17.0}] for v in results.values())
+
+
+def test_result_streaming():
+    store, broker, servers, clients, user, pump = make_world(n_vehicles=1)
+    multi = user.payload(
+        "import autospada\nfor i in range(3):\n    autospada.publish({'i': i})\n"
+    )
+    assign = user.assignment("s", [user.task("veh-0", multi)]).commit()
+    assign.await_results(pump)
+    streamed = list(assign.stream_results())
+    assert [m["value"]["i"] for m in streamed] == [0, 1, 2]
+
+
+def test_resource_quota_turns_into_error():
+    store, broker, servers, _, user, pump = make_world(n_vehicles=0)
+    sig = ScriptedSignalBroker({})
+    c = EdgeClient(
+        "veh-q", servers[0], broker, signal_broker=sig,
+        limits=ResourceLimits(max_results=2),
+    )
+    c.bootstrap()
+    c.run_until_idle()
+    greedy = user.payload(
+        "import autospada\nfor i in range(10):\n    autospada.publish({'i': i})\n"
+    )
+    assign = user.assignment("q", [user.task("veh-q", greedy)]).commit()
+    c.run_until_idle()
+    task = servers[0].task(assign.tasks[0].task_id)
+    assert task.status == TaskStatus.ERROR
+    assert "QuotaExceeded" in task.error_log
+
+
+def test_payload_cache_hits_for_immutable_docs():
+    """Re-running the same payload must not re-download it (paper §3.4.1)."""
+    store, broker, servers, clients, user, pump = make_world(n_vehicles=1)
+    c, _ = clients[0]
+    payload = user.payload("import autospada\nautospada.publish({'ok': 1})\n")
+    a1 = user.assignment("a1", [user.task("veh-0", payload)]).commit()
+    pump()
+    fetches_before = len(c.disk.payload_cache)
+    a2 = user.assignment("a2", [user.task("veh-0", payload)]).commit()
+    pump()
+    assert len(c.disk.payload_cache) == fetches_before  # cache hit
+    assert list(a2.results().values())[0] == [{"ok": 1}]
+
+
+def test_sandbox_blocks_dangerous_imports():
+    from repro.core import dummy_context, run_inline
+
+    exit = run_inline("import os\n", dummy_context())
+    assert exit.exit_code == 1
+    assert "ImportError" in exit.log
+
+
+def test_dummy_mode_runs_payload_standalone(capsys):
+    """Paper §5.1.1: payloads run as ordinary scripts with the dummy lib."""
+    from repro.core import dummy_context, run_inline
+
+    ctx = dummy_context(seed=0, parameters={"n": 3, "signal_name": "x"})
+    exit = run_inline(MEAN_PAYLOAD, ctx)
+    assert exit.exit_code == 0, exit.log
+    assert ctx.published_count == 1
