@@ -86,18 +86,27 @@ def main() -> None:
             sys.stdout.flush()
         rows.extend(new_rows)
 
-    from benchmarks import table2_latency, table3_memory
+    from benchmarks import fleet_scale, table2_latency, table3_memory
 
     emit(table2_latency.rows(n=20 if fast else 100))
     emit(table3_memory.rows())
     emit(_throughput_rows(fast))
     emit(_kernel_rows(fast))
+    fleet_rows, speedups = fleet_scale.rows(fast)
+    emit(fleet_rows)
     try:
         from benchmarks import roofline
 
         emit(roofline.rows())
     except Exception as e:  # dry-run artifacts absent
         print(f"roofline/skipped,0,run repro.launch.dryrun first ({e})")
+
+    # perf-regression guard: the vectorized aggregation path losing to the
+    # per-client loop fails the whole benchmark run (and with it CI)
+    err = fleet_scale.check_guard(speedups, fast=fast)
+    if err:
+        print(f"fleet/guard_failed,0,{err}")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

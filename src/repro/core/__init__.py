@@ -5,7 +5,12 @@ centralized versioned state, logical-clock notifications, an Algorithm-1
 sync loop on every client, container-semantics task execution, and a
 plain-Python user programming model.
 """
-from repro.core.broker import Broker, FaultPlan, client_clock_topic
+from repro.core.broker import (
+    Broker,
+    FaultPlan,
+    client_clock_topic,
+    seeded_fault_plan,
+)
 from repro.core.client import EdgeClient, LocalDisk
 from repro.core.documents import (
     Assignment,
@@ -34,5 +39,5 @@ __all__ = [
     "Payload", "PayloadContext", "RandomSignalBroker", "ResourceLimits",
     "Result", "ScriptedSignalBroker", "Server", "SignalHandler", "StateStore",
     "Task", "TaskCanceled", "TaskStatus", "User", "client_clock_topic",
-    "dummy_context", "make_platform", "run_inline",
+    "dummy_context", "make_platform", "run_inline", "seeded_fault_plan",
 ]

@@ -184,6 +184,21 @@ class EdgeClient:
             raise AssertionError(op)
         return True
 
+    def advance(self, budget: int = 1) -> int:
+        """Simulator-driven stepping: run at most `budget` poll+step cycles
+        and stop early once idle. Unlike `run_until_idle` this bounds the
+        work done per simulation tick, so a discrete-event driver can model
+        slow clients (small budgets) and fast ones (large budgets) against
+        the same wall of events. Returns the number of productive cycles."""
+        done = 0
+        for _ in range(max(0, budget)):
+            progressed = self.poll() > 0
+            progressed |= self.step()
+            if not progressed:
+                break
+            done += 1
+        return done
+
     def run_until_idle(self, max_steps: int = 10_000) -> int:
         """Poll + step until no events and no ops remain."""
         steps = 0

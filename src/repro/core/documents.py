@@ -13,8 +13,8 @@ from __future__ import annotations
 import dataclasses
 import enum
 import hashlib
+import itertools
 import json
-import uuid
 from typing import Any, Mapping
 
 
@@ -40,8 +40,19 @@ def is_valid_transition(src: TaskStatus, dst: TaskStatus) -> bool:
     return dst in VALID_TRANSITIONS[src]
 
 
+_ids = itertools.count()
+
+
 def new_id(prefix: str) -> str:
-    return f"{prefix}-{uuid.uuid4().hex[:16]}"
+    """Process-unique monotone document ids.
+
+    Monotone (not random) ids matter twice at fleet scale: clients iterate
+    pending uploads in sorted-id order, so random ids made the broker
+    message interleaving — and with it any seeded fault schedule —
+    irreproducible run to run; and uuid4's urandom call showed up in
+    profiles of 1000-client simulations. Zero-padded hex keeps
+    lexicographic order == creation order."""
+    return f"{prefix}-{next(_ids):012x}"
 
 
 def _json_canonical(value: Any) -> str:

@@ -98,6 +98,25 @@ class QuotaExceeded(Exception):
     pass
 
 
+# Payload documents are immutable (paper §3.4.1) and one payload is shared
+# by every task of an assignment, so at fleet scale the same source runs
+# thousands of times per round. Cache the compiled code object per source.
+_CODE_CACHE: dict[str, Any] = {}
+_CODE_CACHE_MAX = 256
+
+
+def _compiled(source: str):
+    code = _CODE_CACHE.get(source)
+    if code is None:
+        if len(_CODE_CACHE) >= _CODE_CACHE_MAX:
+            # evict the oldest entry (dict preserves insertion order) so
+            # hot payloads survive a churn of one-off sources
+            _CODE_CACHE.pop(next(iter(_CODE_CACHE)))
+        code = compile(source, "<payload>", "exec")
+        _CODE_CACHE[source] = code
+    return code
+
+
 def run_inline(
     source: str,
     ctx: PayloadContext,
@@ -142,7 +161,7 @@ def run_inline(
 
     try:
         with contextlib.redirect_stdout(log), contextlib.redirect_stderr(log):
-            exec(compile(source, "<payload>", "exec"), glb)  # noqa: S102
+            exec(_compiled(source), glb)  # noqa: S102
         return ContainerExit(exit_code=0, log=log.getvalue())
     except TaskCanceled:
         return ContainerExit(exit_code=137, log=log.getvalue(), canceled=True)

@@ -69,6 +69,11 @@ class StateStore:
         self._payloads: dict[str, Payload] = {}
         self._parameters: dict[str, Parameters] = {}
         self._tasks: dict[str, Task] = {}
+        #: client_id -> ids of that client's possibly-ACTIVE tasks. Kept so
+        #: `fetch_state` is O(client's tasks), not O(all tasks ever) — the
+        #: difference between O(fleet) and O(fleet^2) per simulated round.
+        #: Pruned lazily when a listed task turns out terminal.
+        self._active_by_client: dict[str, list[str]] = {}
         self._assignments: dict[str, Assignment] = {}
         self._results: dict[str, list[Result]] = {}  # task_id -> dense list
         self._clients: dict[str, ClientRecord] = {}
@@ -173,6 +178,9 @@ class StateStore:
             for t in tasks_list:
                 store._tasks[t.task_id] = t
                 store._results[t.task_id] = []
+                store._active_by_client.setdefault(t.client_id, []).append(
+                    t.task_id
+                )
                 store._bump_clock(t.client_id)
             return assignment
 
@@ -211,14 +219,19 @@ class StateStore:
 
     def active_tasks_for(self, client_id: str) -> list[Task]:
         with self._lock:
-            return sorted(
-                (
-                    t
-                    for t in self._tasks.values()
-                    if t.client_id == client_id and t.status == TaskStatus.ACTIVE
-                ),
-                key=lambda t: t.task_id,
-            )
+            ids = self._active_by_client.get(client_id)
+            if not ids:
+                return []
+            active = [
+                t
+                for i in ids
+                if (t := self._tasks[i]).status == TaskStatus.ACTIVE
+            ]
+            if len(active) != len(ids):  # lazy prune of terminal tasks
+                self._active_by_client[client_id] = [
+                    t.task_id for t in active
+                ]
+            return sorted(active, key=lambda t: t.task_id)
 
     def submit_results(
         self,

@@ -1,9 +1,23 @@
-from repro.fleet.compression import ErrorFeedback, make_codec
+from repro.fleet.compression import (
+    ErrorFeedback,
+    batched_dequant_mean,
+    make_codec,
+)
 from repro.fleet.federated import FedConfig, aggregate_deltas, client_delta, local_sgd
 from repro.fleet.elastic import FleetPool
-from repro.fleet.rounds import FederatedDriver
+from repro.fleet.metrics import FleetMetrics, RoundMetrics
+from repro.fleet.rounds import (
+    FederatedDriver,
+    aggregate_packed,
+    aggregate_reference,
+    stack_deltas,
+)
+from repro.fleet.simulator import FleetSimulator, SimConfig
 
 __all__ = [
-    "ErrorFeedback", "FedConfig", "FederatedDriver", "FleetPool",
-    "aggregate_deltas", "client_delta", "local_sgd", "make_codec",
+    "ErrorFeedback", "FedConfig", "FederatedDriver", "FleetMetrics",
+    "FleetPool", "FleetSimulator", "RoundMetrics", "SimConfig",
+    "aggregate_deltas", "aggregate_packed", "aggregate_reference",
+    "batched_dequant_mean", "client_delta", "local_sgd", "make_codec",
+    "stack_deltas",
 ]

@@ -109,6 +109,53 @@ def make_codec(name: str, **kw) -> Any:
 
 
 # --------------------------------------------------------------------- #
+# batched aggregation (the fleet-scale hot path)                         #
+# --------------------------------------------------------------------- #
+@jax.jit
+def _dequant_weighted_sum(
+    q: jax.Array,  # (N, R, row) int8 — all clients' packed deltas, stacked
+    s: jax.Array,  # (N, R) f32 per-row scales
+    w: jax.Array,  # (N,) f32 normalized aggregation weights
+) -> jax.Array:
+    """One fused dequantize + weighted-sum over the client axis.
+
+    Algebraically this is `vmap(dequantize_int8_ref)` over clients followed
+    by a weighted sum, but folding the aggregation weight into each
+    client's dequant scales first (`w_n * s_{nr}`) turns the whole FedAvg
+    server step into a single einsum contraction over the client axis —
+    XLA fuses the int8->f32 cast straight into the reduction and never
+    materializes the (N, R, row) f32 dequantized tensor."""
+    ws = w[:, None] * s
+    return jnp.einsum("nr,nrc->rc", ws, q.astype(jnp.float32))
+
+
+@jax.jit
+def _dequant_mean_uniform(q: jax.Array, s: jax.Array) -> jax.Array:
+    """Unweighted FedAvg mean: the 1/N weight is a compile-time scalar, so
+    no weight vector is built or transferred per round."""
+    out = jnp.einsum("nr,nrc->rc", s, q.astype(jnp.float32))
+    return out / q.shape[0]
+
+
+def batched_dequant_mean(
+    q: np.ndarray | jax.Array,
+    s: np.ndarray | jax.Array,
+    weights: np.ndarray | None = None,
+) -> np.ndarray:
+    """Weighted mean of N packed int8 deltas, computed in one batched op.
+
+    `q` is (N, R, row) int8, `s` is (N, R) f32. Returns the (R, row) f32
+    mean delta. Replaces the per-client unpack-then-accumulate Python loop
+    (see `repro.fleet.rounds.aggregate_reference` for the reference)."""
+    if weights is None:
+        out = _dequant_mean_uniform(q, s)
+    else:
+        w = np.asarray(weights, np.float32)
+        out = _dequant_weighted_sum(q, s, w / w.sum())
+    return np.asarray(jax.block_until_ready(out))
+
+
+# --------------------------------------------------------------------- #
 # error feedback                                                         #
 # --------------------------------------------------------------------- #
 class ErrorFeedback:

@@ -45,19 +45,36 @@ class FleetPool:
         self.broker = broker
         self.server = server
         self.rng = np.random.default_rng(seed)
+        self._signal_fn = signal_fn
+        self._next_index = 0
         self.vehicles: dict[str, Vehicle] = {}
-        for i in range(n_vehicles):
-            cid = f"veh-{i:03d}"
-            signals = ScriptedSignalBroker(
-                signal_fn(i) if signal_fn else {"Vehicle.RoadGrade": constant(0.1 * i)}
-            )
-            self.vehicles[cid] = Vehicle(
-                client_id=cid,
-                disk=LocalDisk(),
-                signals=signals,
-                metadata={"sensors": ["Vehicle.RoadGrade"], "index": i},
-            )
-            self.power_on(cid)
+        for _ in range(n_vehicles):
+            self.add_vehicle()
+
+    # -- fleet membership ----------------------------------------------- #
+    def _make_vehicle(self, i: int) -> Vehicle:
+        cid = f"veh-{i:03d}"
+        signals = ScriptedSignalBroker(
+            self._signal_fn(i)
+            if self._signal_fn
+            else {"Vehicle.RoadGrade": constant(0.1 * i)}
+        )
+        return Vehicle(
+            client_id=cid,
+            disk=LocalDisk(),
+            signals=signals,
+            metadata={"sensors": ["Vehicle.RoadGrade"], "index": i},
+        )
+
+    def add_vehicle(self) -> str:
+        """A brand-new vehicle joins the fleet (paper §2.3: membership is
+        elastic in both directions) and powers on immediately."""
+        i = self._next_index
+        self._next_index += 1
+        v = self._make_vehicle(i)
+        self.vehicles[v.client_id] = v
+        self.power_on(v.client_id)
+        return v.client_id
 
     # -- power control -------------------------------------------------- #
     def power_on(self, cid: str) -> None:

@@ -39,6 +39,10 @@ class FedConfig:
     codec: str = "int8"  # none | int8 | topk
     codec_kwargs: tuple = ()
     deadline_fraction: float = 1.0  # fraction of clients awaited per round
+    #: hard per-round pump budget (simulation ticks); None = wait for the
+    #: quorum forever. With a budget the round closes on time with whatever
+    #: deltas arrived — the paper's wall-clock deadline semantics.
+    deadline_pumps: int | None = None
 
 
 def local_sgd(

@@ -1,0 +1,91 @@
+"""Fleet-scale metrics: what the simulator measures per round and how it
+is summarized.
+
+The ROADMAP's "millions of users" claim needs a load-bearing signal:
+per-round participation, cancellations, broker traffic (published /
+delivered / dropped deltas from the `Broker` counters), simulation ticks
+to quorum, and wall time — aggregated into clients/sec and participation
+percentiles. `benchmarks/fleet_scale.py` prints these as CSV rows and
+`repro.launch.fleet` as a table.
+
+Wall-clock fields are measurement-only: they never feed back into the
+simulation, so determinism (same seed -> same aggregate) is unaffected.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class RoundMetrics:
+    round: int
+    online_at_start: int
+    participants: int
+    canceled: int
+    ticks: int  # simulation ticks the round consumed
+    published: int  # broker messages published during the round
+    delivered: int
+    dropped: int
+    wall_s: float
+    mean_client_loss: float | None = None
+    dist_to_optimum: float | None = None
+
+    @property
+    def participation(self) -> float:
+        return self.participants / max(1, self.online_at_start)
+
+
+@dataclass
+class FleetMetrics:
+    """Accumulates per-round records and derives fleet-level aggregates."""
+
+    rounds: list[RoundMetrics] = field(default_factory=list)
+
+    def record(self, rec: RoundMetrics) -> None:
+        self.rounds.append(rec)
+
+    # ------------------------------------------------------------------ #
+    def summary(self) -> dict:
+        if not self.rounds:
+            return {"rounds": 0}
+        parts = np.array([r.participants for r in self.rounds], np.float64)
+        ratio = np.array([r.participation for r in self.rounds])
+        wall = float(sum(r.wall_s for r in self.rounds))
+        total_participants = int(parts.sum())
+        return {
+            "rounds": len(self.rounds),
+            "total_participants": total_participants,
+            "clients_per_sec": total_participants / max(wall, 1e-9),
+            "wall_s": wall,
+            "ticks": int(sum(r.ticks for r in self.rounds)),
+            "participation_p50": float(np.percentile(ratio, 50)),
+            "participation_p10": float(np.percentile(ratio, 10)),
+            "canceled_total": int(sum(r.canceled for r in self.rounds)),
+            "published": int(sum(r.published for r in self.rounds)),
+            "delivered": int(sum(r.delivered for r in self.rounds)),
+            "dropped": int(sum(r.dropped for r in self.rounds)),
+            "final_dist_to_optimum": self.rounds[-1].dist_to_optimum,
+        }
+
+    def format_table(self) -> str:
+        head = (
+            f"{'round':>5} {'online':>7} {'clients':>8} {'canceled':>9} "
+            f"{'ticks':>6} {'dropped':>8} {'loss':>10} {'dist':>8}"
+        )
+        lines = [head]
+        for r in self.rounds:
+            loss = f"{r.mean_client_loss:.4f}" if r.mean_client_loss is not None else "-"
+            dist = f"{r.dist_to_optimum:.4f}" if r.dist_to_optimum is not None else "-"
+            lines.append(
+                f"{r.round:>5} {r.online_at_start:>7} {r.participants:>8} "
+                f"{r.canceled:>9} {r.ticks:>6} {r.dropped:>8} {loss:>10} {dist:>8}"
+            )
+        s = self.summary()
+        lines.append(
+            f"-- {s['rounds']} rounds, {s['total_participants']} client-rounds, "
+            f"{s['clients_per_sec']:.0f} clients/s, "
+            f"{s['dropped']} notifications dropped"
+        )
+        return "\n".join(lines)

@@ -1,0 +1,202 @@
+"""Deterministic discrete-event fleet simulator.
+
+Drives hundreds-to-thousands of `EdgeClient` instances against one
+`StateStore`/`Broker` pair under a *seeded* schedule of
+
+* broker faults — drop / duplicate / delay via `seeded_fault_plan`
+  (paper §2.3 intermittent connectivity, §3.3.1 resiliency);
+* client churn — vehicles power off and return mid-round through
+  `FleetPool.power_off/power_on`, and brand-new vehicles can join
+  (`FleetPool.add_vehicle`);
+* stragglers — a seeded subset of clients only gets sync-loop budget
+  every `straggler_period`-th tick, so they miss round deadlines and the
+  driver's cancel path is exercised at scale.
+
+Time is an integer tick. One `tick()`:
+
+1. applies churn decisions from the simulation RNG (seeded);
+2. advances the broker clock, releasing delayed messages (`Broker.advance`);
+3. gives every online client a bounded amount of sync-loop work
+   (`EdgeClient.advance(steps_per_tick)`), staggered so stragglers run at
+   a fraction of the fleet rate; idle clients periodically dial in
+   (`resync`) — the paper's recovery story for dropped QoS-0
+   notifications.
+
+Everything observable is a deterministic function of `SimConfig`
+(including the seed): same config => same event interleaving => same
+aggregated model, bit-for-bit. tests/test_simulator.py asserts this and
+the stronger fleet-scale idempotent-ingestion property (a lossy schedule
+converges to the *exact* fault-free aggregate).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from repro.core.broker import Broker, seeded_fault_plan
+from repro.core.server import make_platform
+from repro.core.signals import constant
+from repro.core.user import User
+from repro.fleet.elastic import FleetPool
+from repro.fleet.federated import FedConfig
+from repro.fleet.metrics import FleetMetrics, RoundMetrics
+from repro.fleet.rounds import FederatedDriver
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    """Everything that determines a simulation, seed included."""
+
+    n_clients: int = 32
+    seed: int = 0
+    # -- broker faults -------------------------------------------------- #
+    p_drop: float = 0.0        # QoS-0 notification drop probability
+    p_duplicate: float = 0.0   # QoS-1 redelivery probability
+    max_delay: int = 0         # uniform message delay in ticks
+    # -- churn ---------------------------------------------------------- #
+    p_leave: float = 0.0       # per-online-client per-tick ignition-off
+    p_return: float = 0.0      # per-offline-client per-tick ignition-on
+    # -- stragglers ----------------------------------------------------- #
+    straggler_fraction: float = 0.0
+    straggler_period: int = 4  # stragglers act once every `period` ticks
+    # -- service rates -------------------------------------------------- #
+    steps_per_tick: int = 8    # sync-loop op budget per client per tick
+    resync_period: int = 4     # idle clients dial in every k ticks
+
+
+class FleetSimulator:
+    """Owns the platform (store + broker + server), the vehicle pool, and
+    logical time. `tick` doubles as the `pump` callable every platform
+    driver in this repo expects, so the simulator slots in wherever the
+    old hand-written pump loops did."""
+
+    def __init__(
+        self,
+        cfg: SimConfig,
+        *,
+        signal_fn: Callable[[int], dict] | None = None,
+    ):
+        self.cfg = cfg
+        faults = seeded_fault_plan(
+            cfg.seed,
+            p_drop=cfg.p_drop,
+            p_duplicate=cfg.p_duplicate,
+            max_delay=cfg.max_delay,
+        )
+        self.broker = Broker(faults)
+        self.store, _, (self.server,) = make_platform(broker=self.broker)
+        self.pool = FleetPool(
+            self.store,
+            self.broker,
+            self.server,
+            n_vehicles=cfg.n_clients,
+            signal_fn=signal_fn
+            or (lambda i: {"Vehicle.RoadGrade": constant(0.01 * (i % 7))}),
+            seed=cfg.seed,
+        )
+        self.user = User(self.server, self.broker)
+        self.metrics = FleetMetrics()
+        self.t = 0
+        # churn decisions come from their own seeded stream so adding a
+        # fault knob never perturbs who leaves when
+        self._churn_rng = np.random.default_rng((cfg.seed, 0xC0FFEE))
+        # seeded straggler subset: a fixed permutation prefix
+        order = np.random.default_rng((cfg.seed, 0x57A6)).permutation(
+            cfg.n_clients
+        )
+        k = int(round(cfg.n_clients * cfg.straggler_fraction))
+        slow = set(int(i) for i in order[:k])
+        self._stragglers = {
+            cid
+            for cid, v in self.pool.vehicles.items()
+            if v.metadata["index"] in slow
+        }
+        # let the initial bootstrap traffic settle so round 0 starts from
+        # a quiesced fleet regardless of fleet size
+        for v in self.pool.vehicles.values():
+            if v.client is not None:
+                v.client.run_until_idle()
+
+    # ------------------------------------------------------------------ #
+    # the discrete-event loop                                            #
+    # ------------------------------------------------------------------ #
+    def tick(self) -> None:
+        """One world step. Deterministic given the config."""
+        self.t += 1
+        cfg = self.cfg
+        # 1. churn: ignition off / on, decided per vehicle in fleet order
+        if cfg.p_leave or cfg.p_return:
+            for cid, v in self.pool.vehicles.items():
+                r = self._churn_rng.random()
+                if v.client is not None and r < cfg.p_leave:
+                    self.pool.power_off(cid)
+                elif v.client is None and r < cfg.p_return:
+                    self.pool.power_on(cid)
+        # 2. release delayed broker deliveries due at this tick
+        self.broker.advance(1)
+        # 3. bounded sync-loop service per online client
+        for i, (cid, v) in enumerate(self.pool.vehicles.items()):
+            c = v.client
+            if c is None:
+                continue
+            v.signals.tick()
+            if cid in self._stragglers and (self.t + i) % cfg.straggler_period:
+                continue  # straggler: skips this tick's service slot
+            if c.idle and (self.t + i) % cfg.resync_period == 0:
+                # periodic dial-in recovers dropped QoS-0 notifications
+                c.resync()
+            c.advance(cfg.steps_per_tick)
+
+    # `pump` alias: FederatedDriver and AssignmentDoc.await_results take a
+    # zero-arg world-advancer
+    def pump(self) -> None:
+        self.tick()
+
+    # ------------------------------------------------------------------ #
+    # federated-learning campaign                                        #
+    # ------------------------------------------------------------------ #
+    def run_federated(
+        self,
+        fed: FedConfig,
+        *,
+        dim: int = 32,
+        w_true: np.ndarray | None = None,
+        rounds: int = 5,
+        n_samples: int = 32,
+    ) -> FederatedDriver:
+        """Run `rounds` FedAvg rounds over the simulated fleet, recording
+        per-round `RoundMetrics`. Returns the driver (final model in
+        `driver.w`, per-round records in `driver.history`)."""
+        if w_true is None:
+            w_true = np.sin(np.linspace(0.0, 3.0, dim)).astype(np.float32)
+        driver = FederatedDriver(
+            self.user, fed, dim=dim, w_true=w_true, n_samples=n_samples
+        )
+        for rnd in range(rounds):
+            online = len(self.pool.online())
+            t0, tick0 = time.perf_counter(), self.t
+            pub0, del0, drop0 = (
+                self.broker.published,
+                self.broker.delivered,
+                self.broker.dropped,
+            )
+            rec = driver.run_round(rnd, pump=self.tick)
+            self.metrics.record(
+                RoundMetrics(
+                    round=rnd,
+                    online_at_start=online,
+                    participants=rec["participants"],
+                    canceled=rec["canceled"],
+                    ticks=self.t - tick0,
+                    published=self.broker.published - pub0,
+                    delivered=self.broker.delivered - del0,
+                    dropped=self.broker.dropped - drop0,
+                    wall_s=time.perf_counter() - t0,
+                    mean_client_loss=rec["mean_client_loss"],
+                    dist_to_optimum=rec["dist_to_optimum"],
+                )
+            )
+        return driver

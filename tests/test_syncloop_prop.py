@@ -16,6 +16,10 @@ the platform must converge once the network heals:
 """
 from __future__ import annotations
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
