@@ -1,18 +1,24 @@
-"""Fleet-scale benchmark: vectorized delta aggregation + simulator throughput.
+"""Fleet-scale benchmark: vectorized delta aggregation, the columnar
+signal plane, and simulator throughput.
 
-Two sections, CSV rows like the rest of the harness:
+Three sections, CSV rows like the rest of the harness:
 
 * ``fleet/agg_*`` — FedAvg server-step latency over N packed int8 deltas,
   per-client reference loop (`aggregate_reference`) vs the batched
   vmap+einsum path (`aggregate_packed`), at N in {32, 256, 1024}. The
   batched path must win at every N (CI guard) and by >= 5x at N=1024.
+* ``fleet/plane_*`` — per-tick fleet signal cost: the legacy per-vehicle
+  `ScriptedSignalBroker` tick loop (N brokers x n_signals Python
+  iterators + subscriber callbacks) vs ONE `FleetSignalPlane.step` (a
+  single jit'd drive-cycle evaluation for the whole fleet) at N=1024.
+  The plane must win at the largest N (CI guard; >= 2x in full mode).
 * ``fleet/sim_*`` — end-to-end discrete-event simulation: >= 1000 clients,
   >= 5 FedAvg rounds under a seeded lossy-broker schedule with stragglers,
   reporting clients/sec. In full (non ``--fast``) mode the run is repeated
   with the same seed and the final aggregates must match bit-for-bit.
 
 Run: ``PYTHONPATH=src python -m benchmarks.fleet_scale [--fast]``
-(exits non-zero if the vectorized path loses to the reference loop).
+(exits non-zero if a vectorized path loses to its per-client loop).
 """
 from __future__ import annotations
 
@@ -27,8 +33,12 @@ AGG_SIZES = (32, 256, 1024)
 #: row=256) so the per-client loop pays its real per-message Python cost
 AGG_DIM = 256
 AGG_ROW = 256
-#: acceptance floor for the batched path at the largest N
+#: acceptance floor for the batched aggregation path at the largest N
 TARGET_SPEEDUP_AT_MAX = 5.0
+#: acceptance floor for the signal plane vs the per-vehicle tick loop
+PLANE_TARGET_SPEEDUP = 2.0
+PLANE_SIZES_FAST = (256,)
+PLANE_SIZES = (256, 1024)
 
 
 def _synthetic_msgs(n: int, seed: int = 0) -> list[dict]:
@@ -123,6 +133,57 @@ def aggregation_rows(fast: bool) -> tuple[list[tuple[str, float, str]], dict[int
     return rows, speedups
 
 
+def signal_plane_rows(
+    fast: bool,
+) -> tuple[list[tuple[str, float, str]], dict[int, float]]:
+    """Per-tick signal cost for the whole fleet, both plumbing generations
+    on the same seeded drive-cycle streams:
+
+    * baseline — the pre-plane hot path: N `ScriptedSignalBroker`s (one
+      per vehicle), each feeding a subscribed `SignalHandler` through
+      per-signal Python iterators and callbacks, ticked in a loop;
+    * plane — ONE `FleetSignalPlane.step()`: a single jit'd scenario
+      evaluation producing the whole (N, n_signals) column block.
+    """
+    from repro.core.signals import SignalHandler
+    from repro.fleet.scenarios import SIGNALS, Scenario, scripted_brokers
+
+    reps = 10 if fast else 30
+    sizes = PLANE_SIZES_FAST if fast else PLANE_SIZES
+    rows, speedups = [], {}
+    for n in sizes:
+        scen = Scenario("mixed", seed=n)
+        plane = scen.plane(n)
+        plane.step()  # warm-up: jit compile the scenario step
+        brokers = scripted_brokers(scen, n, reps + 4)
+        handlers = [SignalHandler(b) for b in brokers]
+        for h in handlers:  # subscribe every signal (the simulator state)
+            for name in SIGNALS:
+                h.ensure_subscribed(name)
+
+        def old_tick() -> None:
+            for b in brokers:
+                b.tick()
+
+        t_old, t_plane = _time_pair(old_tick, plane.step, reps)
+        speedups[n] = t_old / t_plane
+        rows.append(
+            (
+                f"fleet/plane_tick_loop_N{n}",
+                t_old,
+                f"{n} brokers x {len(SIGNALS)} signals, per-vehicle Python",
+            )
+        )
+        rows.append(
+            (
+                f"fleet/plane_step_N{n}",
+                t_plane,
+                f"{speedups[n]:.1f}x vs per-vehicle tick loop",
+            )
+        )
+    return rows, speedups
+
+
 def simulator_rows(fast: bool) -> list[tuple[str, float, str]]:
     from repro.fleet import FedConfig, FleetSimulator, SimConfig
 
@@ -162,22 +223,33 @@ def simulator_rows(fast: bool) -> list[tuple[str, float, str]]:
     ]
 
 
-def rows(fast: bool) -> tuple[list[tuple[str, float, str]], dict[int, float]]:
-    """All fleet rows plus the aggregation speedups (for the CI guard)."""
-    agg, speedups = aggregation_rows(fast)
-    if check_guard(speedups, fast=fast) is not None:
-        # One re-measure before declaring a regression: shared runners
-        # throttle unpredictably and the guard should catch code, not noise.
-        agg2, speedups2 = aggregation_rows(fast)
+def _measure_guarded(measure_fn, guard_fn, fast: bool):
+    """Measure a section; on a tripped guard, re-measure once and keep
+    the better speedup — shared runners throttle unpredictably and the
+    guard should catch code, not noise."""
+    section_rows, speedups = measure_fn(fast)
+    if guard_fn(speedups, fast=fast) is not None:
+        rows2, speedups2 = measure_fn(fast)
         if speedups2[max(speedups2)] > speedups[max(speedups)]:
-            agg, speedups = agg2, speedups2
-    return agg + simulator_rows(fast), speedups
+            section_rows, speedups = rows2, speedups2
+    return section_rows, speedups
 
 
-def check_guard(speedups: dict[int, float], *, fast: bool) -> str | None:
-    """Returns an error string if the vectorized path regressed.
+def rows(
+    fast: bool,
+) -> tuple[list[tuple[str, float, str]], dict[str, dict[int, float]]]:
+    """All fleet rows plus the vectorization speedups (for the CI guard),
+    keyed by section: ``{"agg": {N: x}, "plane": {N: x}}``."""
+    agg, agg_speedups = _measure_guarded(aggregation_rows, _agg_guard, fast)
+    plane, plane_speedups = _measure_guarded(
+        signal_plane_rows, _plane_guard, fast
+    )
+    guards = {"agg": agg_speedups, "plane": plane_speedups}
+    return agg + plane + simulator_rows(fast), guards
 
-    The guard is evaluated at fleet scale (the largest benchmarked N):
+
+def _agg_guard(speedups: dict[int, float], *, fast: bool) -> str | None:
+    """The guard is evaluated at fleet scale (the largest benchmarked N):
     at N<=64 the batched path is dominated by fixed JAX dispatch overhead
     and losing there is expected, not a regression."""
     n_max = max(speedups)
@@ -192,6 +264,31 @@ def check_guard(speedups: dict[int, float], *, fast: bool) -> str | None:
             f"{speedups[n_max]:.1f}x < {TARGET_SPEEDUP_AT_MAX:.0f}x target"
         )
     return None
+
+
+def _plane_guard(speedups: dict[int, float], *, fast: bool) -> str | None:
+    n_max = max(speedups)
+    if speedups[n_max] < 1.0:
+        return (
+            f"signal plane step slower than per-vehicle tick loop at "
+            f"N={n_max}: {speedups[n_max]:.2f}x"
+        )
+    if not fast and speedups[n_max] < PLANE_TARGET_SPEEDUP:
+        return (
+            f"signal plane speedup at N={n_max} is "
+            f"{speedups[n_max]:.1f}x < {PLANE_TARGET_SPEEDUP:.0f}x target"
+        )
+    return None
+
+
+def check_guard(
+    speedups: dict[str, dict[int, float]], *, fast: bool
+) -> str | None:
+    """Returns an error string if any vectorized path regressed against
+    its per-client Python baseline."""
+    return _agg_guard(speedups["agg"], fast=fast) or _plane_guard(
+        speedups["plane"], fast=fast
+    )
 
 
 def main() -> None:

@@ -101,8 +101,9 @@ def main() -> None:
     except Exception as e:  # dry-run artifacts absent
         print(f"roofline/skipped,0,run repro.launch.dryrun first ({e})")
 
-    # perf-regression guard: the vectorized aggregation path losing to the
-    # per-client loop fails the whole benchmark run (and with it CI)
+    # perf-regression guard: a vectorized fleet path (batched aggregation,
+    # columnar signal-plane step) losing to its per-client Python loop
+    # fails the whole benchmark run (and with it CI)
     err = fleet_scale.check_guard(speedups, fast=fast)
     if err:
         print(f"fleet/guard_failed,0,{err}")

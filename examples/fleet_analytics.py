@@ -1,0 +1,55 @@
+"""Streaming fleet analytics — the paper's data-analytics case study
+(fuel-consumption statistics over a driving fleet), on the columnar
+signal plane.
+
+A 64-vehicle mixed fleet (highway cruisers, urban stop-go, cold idlers —
+seeded drive cycles from `repro.fleet.scenarios`) streams signals through
+one `FleetSignalPlane`: a single jit step advances every vehicle's every
+signal per simulation tick. Each analytics window is an ordinary platform
+assignment: vehicles fold their recent `Vehicle.FuelRate` observations
+through Welford's algorithm and a fixed-bin histogram *on-board* and
+publish only the (count, mean, M2, bins) sketch; the server merges all
+sketches in one batched jit reduction — exact fleet statistics, no raw
+samples ever uploaded.
+
+The run is deterministic in the seed, faults and all.
+
+Run: PYTHONPATH=src python examples/fleet_analytics.py
+"""
+from repro.fleet import AnalyticsConfig, FleetSimulator, SimConfig
+
+
+def main() -> None:
+    sim = FleetSimulator(
+        SimConfig(
+            n_clients=64,
+            seed=7,
+            scenario="mixed",     # seeded drive-cycle mix per vehicle
+            p_drop=0.05,          # lossy broker, as always
+            max_delay=1,
+            straggler_fraction=0.1,
+        )
+    )
+    driver = sim.run_analytics(
+        AnalyticsConfig(
+            signal="Vehicle.FuelRate",
+            window=48,            # on-vehicle samples per sketch
+            bins=16,
+            deadline_fraction=0.85,
+            deadline_pumps=48,
+        ),
+        windows=6,
+        warmup_ticks=24,          # let the signal history ring fill
+    )
+    print(sim.metrics.format_table())
+    print(driver.format_table())
+    last = driver.history[-1]
+    print(
+        f"fleet Vehicle.FuelRate: mean={last.mean:.3f} L/h, "
+        f"std={last.std:.3f}, {last.count} on-board samples sketched by "
+        f"{last.participants} vehicles — raw samples never left the cars"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,8 @@ from repro.core.sandbox import ContainerExit, ResourceLimits, run_inline
 from repro.core.server import Server, make_platform
 from repro.core.signals import (
     CsvSignalBroker,
+    FleetSignalPlane,
+    PlaneSignalView,
     RandomSignalBroker,
     ScriptedSignalBroker,
     SignalHandler,
@@ -35,9 +37,10 @@ from repro.core.user import User
 
 __all__ = [
     "Assignment", "Broker", "ContainerExit", "CsvSignalBroker", "EdgeClient",
-    "FaultPlan", "FlakyServer", "LocalDisk", "NetworkError", "Parameters",
-    "Payload", "PayloadContext", "RandomSignalBroker", "ResourceLimits",
-    "Result", "ScriptedSignalBroker", "Server", "SignalHandler", "StateStore",
-    "Task", "TaskCanceled", "TaskStatus", "User", "client_clock_topic",
+    "FaultPlan", "FlakyServer", "FleetSignalPlane", "LocalDisk",
+    "NetworkError", "Parameters", "Payload", "PayloadContext",
+    "PlaneSignalView", "RandomSignalBroker", "ResourceLimits", "Result",
+    "ScriptedSignalBroker", "Server", "SignalHandler", "StateStore", "Task",
+    "TaskCanceled", "TaskStatus", "User", "client_clock_topic",
     "dummy_context", "make_platform", "run_inline", "seeded_fault_plan",
 ]

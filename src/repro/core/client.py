@@ -393,11 +393,17 @@ class EdgeClient:
                 return None
             return self.signal_handler.get(name)
 
+        def get_signal_window(name: str, k: int) -> list[float]:
+            if self.signal_handler is None:
+                return []
+            return self.signal_handler.window(name, k)
+
         def publish(value: Any) -> None:
             self._container_events.put((task_id, value, None, ""))
 
         return PayloadContext(
             get_signal=get_signal,
+            get_signal_window=get_signal_window,
             publish=publish,
             parameters=parameters,
             state_cache=self.disk.task_state,

@@ -45,14 +45,27 @@ class PayloadContext:
         task_key: str = "local",
         cancel_event: threading.Event | None = None,
         clock: Callable[[], float] = time.monotonic,
+        get_signal_window: Callable[[str, int], list[float]] | None = None,
+        virtual_clock: bool | None = None,
     ):
         self._get_signal = get_signal
+        self._get_signal_window = get_signal_window
         self._publish = publish
         self._parameters = parameters
         self._state_cache = state_cache if state_cache is not None else {}
         self._task_key = task_key
         self._cancel = cancel_event or threading.Event()
         self._clock = clock
+        # A virtual (simulated) clock means `sleep` must never burn real
+        # wall-clock waiting on it — fleet-scale sims inject clocks that
+        # only advance when the world pumps. Callers injecting a wrapped
+        # wall clock should pass virtual_clock=False explicitly; the
+        # default recognizes the stdlib wall clocks by identity.
+        if virtual_clock is None:
+            virtual_clock = clock not in (
+                time.monotonic, time.time, time.perf_counter
+            )
+        self._virtual_clock = virtual_clock
         self.published_count = 0
 
     # -- cancellation ------------------------------------------------- #
@@ -67,6 +80,16 @@ class PayloadContext:
     def get_signal(self, name: str) -> float | None:
         self._check_cancel()
         return self._get_signal(name)
+
+    def get_signal_window(self, name: str, k: int) -> list[float]:
+        """Last `k` observed values of a signal, oldest first — the input
+        to on-vehicle windowed analytics. Sources without history fall
+        back to a single latest-value sample."""
+        self._check_cancel()
+        if self._get_signal_window is not None:
+            return [float(v) for v in self._get_signal_window(name, k)]
+        v = self._get_signal(name)
+        return [] if v is None else [float(v)]
 
     def publish(self, value: Any) -> None:
         self._check_cancel()
@@ -90,11 +113,21 @@ class PayloadContext:
         self._state_cache.pop(self._task_key, None)
 
     def sleep(self, seconds: float) -> None:
-        """Cancellation-aware sleep; in simulation the clock is virtual."""
+        """Cancellation-aware sleep; in simulation the clock is virtual.
+
+        With a wall clock this naps in small slices so cancellation stays
+        responsive. With an injected virtual clock it must NOT nap for
+        real — a simulated 5 s sleep across 1000 vehicles would otherwise
+        burn actual wall-clock — so it only yields the GIL between
+        cancellation checks while waiting for the simulation to advance
+        the clock."""
         deadline = self._clock() + seconds
         while self._clock() < deadline:
             self._check_cancel()
-            time.sleep(min(0.002, max(0.0, deadline - self._clock())))
+            if self._virtual_clock:
+                time.sleep(0)  # yield only; virtual time is free
+            else:
+                time.sleep(min(0.002, max(0.0, deadline - self._clock())))
 
     def time(self) -> float:
         return self._clock()
@@ -109,7 +142,15 @@ def dummy_context(seed: int = 0, parameters: Any = None) -> PayloadContext:
     def get_signal(name: str) -> float:
         return float(rng.standard_normal())
 
+    def get_signal_window(name: str, k: int) -> list[float]:
+        return [float(v) for v in rng.standard_normal(max(0, int(k)))]
+
     def publish(value: Any) -> None:
         print(f"[autospada dummy] publish: {json.dumps(value, default=str)}")
 
-    return PayloadContext(get_signal=get_signal, publish=publish, parameters=parameters)
+    return PayloadContext(
+        get_signal=get_signal,
+        get_signal_window=get_signal_window,
+        publish=publish,
+        parameters=parameters,
+    )

@@ -11,17 +11,38 @@ signals". We reproduce that normalization layer:
 * `CsvSignalBroker` — the paper's §5.1.1 CSV playback ("control the values
   of signals by providing a CSV file with hard-coded signal values");
 * `ScriptedSignalBroker` — deterministic programmable source for tests and
-  the vehicle-fleet simulation;
+  single-vehicle scripting;
 * `SignalHandler` — the client-side proxy + latest-value cache that tasks
   actually read from, insulating payloads from the concrete source.
+
+Fleet scale changed the shape of this layer. Per-vehicle iterator brokers
+cost O(n_clients × n_signals) Python per simulation tick — the dominant
+cost at 1000+ vehicles — so the fleet's signals now live in one columnar
+structure of arrays:
+
+* `FleetSignalPlane` — the whole fleet's latest values as a single
+  `(n_clients, n_signals)` float32 matrix plus a rolling-history ring,
+  advanced by ONE call per simulator tick (typically a jit'd scenario
+  step, see `repro.fleet.scenarios`);
+* `PlaneSignalView` — a per-vehicle `SignalBroker` that is just a row
+  index into the plane. `SignalHandler.get` reads through it, so payload
+  code (`autospada.get_signal`) is unchanged.
+
+`ScriptedSignalBroker`/`CsvSignalBroker` remain supported both standalone
+(push semantics, exactly as before) and as *adapters* into the plane:
+`FleetSignalPlane.from_trace` / `from_csv_fleet` load their columns and
+play them back with identical latest-value semantics (blank cells hold the
+previous value; exhausted columns hold their last value).
 """
 from __future__ import annotations
 
 import csv
 import io
 import itertools
+import math
 import threading
-from typing import Callable, Iterable, Iterator, Mapping
+from collections import deque
+from typing import Callable, Iterable, Iterator, Mapping, Sequence
 
 import numpy as np
 
@@ -59,60 +80,322 @@ class ScriptedSignalBroker(SignalBroker):
     Subscription delivers the next scripted value immediately (MQTT
     retained-message semantics): a late subscriber still observes the
     signal's current value, matching the paper's latest-value cache intent.
+
+    An iterator may yield ``None`` to mean "no observation this tick" —
+    the subscriber's latest-value cache simply holds the previous value.
+    This keeps multi-column sources (CSV playback) tick-aligned when one
+    column has gaps.
     """
 
     def __init__(self, scripts: Mapping[str, Iterator[float]]):
         self._scripts = {k: iter(v) for k, v in scripts.items()}
         self._subs: list[tuple[list[str], Callable[[str, float], None]]] = []
 
+    def _emit(self, name: str, cb: Callable[[str, float], None]) -> None:
+        it = self._scripts.get(name)
+        if it is None:
+            return
+        try:
+            v = next(it)
+        except StopIteration:
+            return
+        if v is not None:
+            cb(name, float(v))
+
     def subscribe(self, names, cb):
         self._subs.append((list(names), cb))
         for n in list(names):
-            it = self._scripts.get(n)
-            if it is None:
-                continue
-            try:
-                cb(n, float(next(it)))
-            except StopIteration:
-                pass
+            self._emit(n, cb)
 
     def tick(self):
         for names, cb in self._subs:
             for n in names:
-                it = self._scripts.get(n)
-                if it is None:
-                    continue
-                try:
-                    cb(n, float(next(it)))
-                except StopIteration:
-                    pass
+                self._emit(n, cb)
 
 
 class CsvSignalBroker(ScriptedSignalBroker):
-    """CSV playback: one column per signal, one row per tick."""
+    """CSV playback: one column per signal, one row per tick.
+
+    Robust to real-world CSVs: blank cells are skipped (the latest-value
+    cache holds the previous observation for that tick), ragged rows and
+    non-numeric cells raise errors naming the offending column and row.
+    """
 
     def __init__(self, csv_text: str):
-        reader = csv.DictReader(io.StringIO(csv_text))
-        columns: dict[str, list[float]] = {}
-        for row in reader:
-            for k, v in row.items():
-                columns.setdefault(k, []).append(float(v))
+        columns = parse_signal_csv(csv_text)
         super().__init__({k: iter(v) for k, v in columns.items()})
+
+
+def parse_signal_csv(csv_text: str) -> dict[str, list[float | None]]:
+    """Parse a signals CSV into tick-aligned columns.
+
+    Blank cells become ``None`` ("no observation this tick" — hold the
+    previous value). A row with more or fewer cells than the header, or a
+    cell that is not a number, raises ``ValueError`` naming the column and
+    the 1-based data row.
+    """
+    reader = csv.reader(io.StringIO(csv_text))
+    try:
+        header = next(reader)
+    except StopIteration:
+        raise ValueError("signals CSV is empty (no header row)") from None
+    header = [h.strip() for h in header]
+    dupes = {n for n in header if header.count(n) > 1}
+    if dupes:
+        raise ValueError(
+            f"signals CSV header repeats column(s): {', '.join(sorted(dupes))}"
+        )
+    columns: dict[str, list[float | None]] = {name: [] for name in header}
+    for rownum, row in enumerate(reader, start=1):
+        if not row or (len(row) == 1 and not row[0].strip()):
+            continue  # ignore trailing/blank lines entirely
+        if len(row) != len(header):
+            raise ValueError(
+                f"signals CSV row {rownum} has {len(row)} cells, expected "
+                f"{len(header)} (columns: {', '.join(header)})"
+            )
+        for name, cell in zip(header, row):
+            cell = cell.strip()
+            if not cell:
+                columns[name].append(None)  # blank: hold previous value
+                continue
+            try:
+                columns[name].append(float(cell))
+            except ValueError:
+                raise ValueError(
+                    f"signals CSV column {name!r}, row {rownum}: "
+                    f"cannot parse {cell!r} as a number"
+                ) from None
+    return columns
+
+
+# --------------------------------------------------------------------- #
+# the columnar fleet signal plane                                        #
+# --------------------------------------------------------------------- #
+class FleetSignalPlane:
+    """Structure-of-arrays latest-value store for an entire fleet.
+
+    ``values`` is the `(n_clients, n_signals)` float32 matrix of every
+    vehicle's current signal readings; ``step()`` advances the whole fleet
+    with ONE call to ``series_fn(t)`` (a jit'd drive-cycle step from
+    `repro.fleet.scenarios`, or a trace playback) instead of the old
+    O(n_clients × n_signals) per-vehicle iterator loop. A rolling ring of
+    the last ``history`` ticks backs windowed on-vehicle analytics
+    (`autospada.get_signal_window`).
+
+    Per-vehicle access goes through `view(row)` — a `PlaneSignalView`
+    satisfying the `SignalBroker` interface, so `SignalHandler` and every
+    payload keep working unchanged.
+
+    NaN is the "no observation yet" marker: `read` maps it to ``None``
+    (exactly what `SignalHandler.get` returns before a push broker's first
+    callback).
+    """
+
+    def __init__(
+        self,
+        names: Sequence[str],
+        series_fn: Callable[[int], np.ndarray],
+        *,
+        history: int = 256,
+        grow_fn: Callable[[int], Callable[[int], np.ndarray]] | None = None,
+    ):
+        self.names: tuple[str, ...] = tuple(names)
+        self._col = {n: j for j, n in enumerate(self.names)}
+        self._series_fn = series_fn
+        self._grow_fn = grow_fn
+        self.t = 0
+        self.values = np.array(series_fn(0), np.float32, copy=True)
+        if self.values.ndim != 2 or self.values.shape[1] != len(self.names):
+            raise ValueError(
+                f"series_fn must return (n_clients, {len(self.names)}), "
+                f"got {self.values.shape}"
+            )
+        self.n_clients = self.values.shape[0]
+        self._hist_cap = max(1, int(history))
+        self._hist = np.full(
+            (self._hist_cap, self.n_clients, len(self.names)),
+            np.nan,
+            np.float32,
+        )
+        self._hist[0] = self.values
+        self._hist_len = 1
+
+    # -- construction adapters ----------------------------------------- #
+    @classmethod
+    def from_trace(
+        cls,
+        names: Sequence[str],
+        trace: np.ndarray,
+        *,
+        history: int = 256,
+    ) -> "FleetSignalPlane":
+        """Play back a precomputed `(n_ticks, n_clients, n_signals)` trace.
+
+        Ticks past the end hold the final row (latest-value semantics, the
+        plane analogue of an exhausted scripted iterator)."""
+        trace = np.asarray(trace, np.float32)
+        if trace.ndim != 3 or trace.shape[2] != len(names):
+            raise ValueError(f"trace must be (T, n, {len(names)}), got {trace.shape}")
+        last = trace.shape[0] - 1
+
+        def series(t: int) -> np.ndarray:
+            return trace[min(t, last)]
+
+        return cls(names, series, history=history)
+
+    @classmethod
+    def from_csv_fleet(
+        cls,
+        csv_texts: Sequence[str],
+        *,
+        history: int = 256,
+    ) -> "FleetSignalPlane":
+        """Load one CSV per vehicle into a single plane (the
+        `CsvSignalBroker` adapter path). Columns are tick-aligned; blank
+        cells hold the previous value (leading blanks read as ``None``),
+        short columns hold their last value."""
+        per_vehicle = [parse_signal_csv(text) for text in csv_texts]
+        names = sorted({n for cols in per_vehicle for n in cols})
+        n_ticks = max(
+            (len(v) for cols in per_vehicle for v in cols.values()), default=0
+        )
+        n_ticks = max(1, n_ticks)
+        trace = np.full((n_ticks, len(csv_texts), len(names)), np.nan, np.float32)
+        for i, cols in enumerate(per_vehicle):
+            for j, name in enumerate(names):
+                col = cols.get(name, [])
+                last = math.nan
+                for t in range(n_ticks):
+                    v = col[t] if t < len(col) else None
+                    if v is not None:
+                        last = v
+                    trace[t, i, j] = last
+        return cls.from_trace(names, trace, history=history)
+
+    # -- the hot path --------------------------------------------------- #
+    def step(self) -> None:
+        """Advance every vehicle's every signal: one series_fn call, one
+        ring write. This is the whole fleet's per-tick signal cost."""
+        self.t += 1
+        self.values = np.asarray(self._series_fn(self.t), np.float32)
+        self._hist[self.t % self._hist_cap] = self.values
+        self._hist_len = min(self._hist_len + 1, self._hist_cap)
+
+    # -- per-vehicle reads ---------------------------------------------- #
+    def read(self, row: int, name: str) -> float | None:
+        j = self._col.get(name)
+        if j is None:
+            return None
+        v = float(self.values[row, j])
+        return None if math.isnan(v) else v
+
+    def window(self, row: int, name: str, k: int) -> list[float]:
+        """Last `k` observed values for one vehicle's signal, oldest
+        first (at most `history`; NaN "not yet observed" entries are
+        skipped, mirroring a push subscriber that saw no callback)."""
+        j = self._col.get(name)
+        if j is None:
+            return []
+        k = max(0, min(int(k), self._hist_len))
+        start = self.t - k + 1
+        idx = [(start + i) % self._hist_cap for i in range(k)]
+        vals = self._hist[idx, row, j]
+        return [float(v) for v in vals if not math.isnan(v)]
+
+    def view(self, row: int) -> "PlaneSignalView":
+        return PlaneSignalView(self, row)
+
+    # -- fleet growth ---------------------------------------------------- #
+    def add_client(self) -> int:
+        """A new vehicle joins: regrow the series to n+1 rows (scenario
+        generators are row-stable: existing vehicles' streams are
+        unchanged). Returns the new row index."""
+        if self._grow_fn is None:
+            raise ValueError(
+                "this plane has a fixed fleet size (no grow_fn); "
+                "construct it via a scenario to support add_client"
+            )
+        n_new = self.n_clients + 1
+        self._series_fn = self._grow_fn(n_new)
+        self.values = np.array(self._series_fn(self.t), np.float32, copy=True)
+        hist = np.full(
+            (self._hist_cap, n_new, len(self.names)), np.nan, np.float32
+        )
+        hist[:, : self.n_clients, :] = self._hist
+        hist[self.t % self._hist_cap] = self.values
+        self._hist = hist
+        self.n_clients = n_new
+        return n_new - 1
+
+
+class PlaneSignalView(SignalBroker):
+    """One vehicle's `SignalBroker`-shaped window into the plane.
+
+    Reads are pull-based (`read`/`read_window` — `SignalHandler` prefers
+    these when present), so the per-vehicle cost of a fleet tick is zero:
+    the plane's single `step()` already advanced this row. `subscribe` and
+    `tick` keep push compatibility for standalone use.
+    """
+
+    def __init__(self, plane: FleetSignalPlane, row: int):
+        self.plane = plane
+        self.row = row
+        self._subs: list[tuple[list[str], Callable[[str, float], None]]] = []
+
+    def subscribe(self, names, cb):
+        self._subs.append((list(names), cb))
+        for n in list(names):
+            v = self.plane.read(self.row, n)
+            if v is not None:
+                cb(n, v)
+
+    def tick(self):
+        # Standalone push compatibility only — the fleet path never calls
+        # this (the plane steps once for all vehicles).
+        for names, cb in self._subs:
+            for n in names:
+                v = self.plane.read(self.row, n)
+                if v is not None:
+                    cb(n, v)
+
+    # pull interface (preferred by SignalHandler)
+    def read(self, name: str) -> float | None:
+        return self.plane.read(self.row, name)
+
+    def read_window(self, name: str, k: int) -> list[float]:
+        return self.plane.window(self.row, name, k)
 
 
 class SignalHandler:
     """Client component: subscribes to the broker, caches the latest value
-    of every signal a task has asked about (paper Fig. 4)."""
+    of every signal a task has asked about (paper Fig. 4).
+
+    Pull-capable brokers (`PlaneSignalView`) are read through directly —
+    the cache is the plane column itself. Push brokers keep the classic
+    callback-fed latest-value cache; a bounded per-signal history (so
+    `window()` and `autospada.get_signal_window` work on any source) is
+    recorded lazily, from the first `window()` call on, to keep the
+    latest-value-only hot path free of per-observation deque work.
+    """
+
+    #: history retained per signal for push-based brokers
+    HISTORY = 256
 
     def __init__(self, broker: SignalBroker):
         self._broker = broker
+        self._pull = callable(getattr(broker, "read", None))
         self._latest: dict[str, float] = {}
+        self._hist: dict[str, deque] = {}
         self._lock = threading.Lock()
         self._known: set[str] = set()
 
     def _observe(self, name: str, value: float) -> None:
         with self._lock:
             self._latest[name] = value
+            h = self._hist.get(name)
+            if h is not None:
+                h.append(value)
 
     def ensure_subscribed(self, name: str) -> None:
         with self._lock:
@@ -123,8 +406,29 @@ class SignalHandler:
 
     def get(self, name: str) -> float | None:
         self.ensure_subscribed(name)
+        if self._pull:
+            return self._broker.read(name)
         with self._lock:
             return self._latest.get(name)
+
+    def window(self, name: str, k: int) -> list[float]:
+        """Last `k` observed values, oldest first. Push brokers start
+        recording on the first `window()` call (seeded with the current
+        latest value); pull brokers serve the plane's history ring."""
+        self.ensure_subscribed(name)
+        if self._pull and callable(getattr(self._broker, "read_window", None)):
+            return self._broker.read_window(name, k)
+        with self._lock:
+            h = self._hist.get(name)
+            if h is None:
+                h = deque(maxlen=self.HISTORY)
+                if name in self._latest:
+                    h.append(self._latest[name])
+                self._hist[name] = h
+            if not h:
+                return []
+            k = max(0, int(k))
+            return list(h)[-k:] if k else []
 
 
 def constant(v: float) -> Iterator[float]:

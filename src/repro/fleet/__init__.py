@@ -1,3 +1,9 @@
+from repro.fleet.analytics import (
+    AnalyticsConfig,
+    AnalyticsDriver,
+    WindowStats,
+    merge_moments_reference,
+)
 from repro.fleet.compression import (
     ErrorFeedback,
     batched_dequant_mean,
@@ -10,14 +16,18 @@ from repro.fleet.rounds import (
     FederatedDriver,
     aggregate_packed,
     aggregate_reference,
+    pump_until_deadline,
     stack_deltas,
 )
+from repro.fleet.scenarios import SCENARIOS, SIGNALS, Scenario, build_plane
 from repro.fleet.simulator import FleetSimulator, SimConfig
 
 __all__ = [
-    "ErrorFeedback", "FedConfig", "FederatedDriver", "FleetMetrics",
-    "FleetPool", "FleetSimulator", "RoundMetrics", "SimConfig",
-    "aggregate_deltas", "aggregate_packed", "aggregate_reference",
-    "batched_dequant_mean", "client_delta", "local_sgd", "make_codec",
-    "stack_deltas",
+    "AnalyticsConfig", "AnalyticsDriver", "ErrorFeedback", "FedConfig",
+    "FederatedDriver", "FleetMetrics", "FleetPool", "FleetSimulator",
+    "RoundMetrics", "SCENARIOS", "SIGNALS", "Scenario", "SimConfig",
+    "WindowStats", "aggregate_deltas", "aggregate_packed",
+    "aggregate_reference", "batched_dequant_mean", "build_plane",
+    "client_delta", "local_sgd", "make_codec", "merge_moments_reference",
+    "pump_until_deadline", "stack_deltas",
 ]

@@ -1,0 +1,232 @@
+"""Streaming data analytics over the fleet — the paper's second workload.
+
+AutoSPADA's operational case study is not learning: it is *streaming
+statistics over fuel-consumption signals* computed on-vehicle with only
+compact summaries leaving the car (OODIDA's on-board/off-board analytics
+split). This module is that workload on our platform:
+
+1. an `AnalyticsDriver` window is one assignment to every online vehicle;
+2. each vehicle's task container reads the last `window` observations of a
+   signal from its signal plane view (`autospada.get_signal_window`),
+   folds them through Welford's online mean/variance and a fixed-bin
+   histogram, and publishes the resulting *sketch* — (count, mean, M2,
+   bin counts), O(bins) bytes no matter how many samples were seen;
+3. the server stacks all vehicles' sketches and merges them in one
+   batched jit reduction (`repro.kernels.ops.merge_moments` /
+   `merge_histograms` — the analytics twin of `batched_dequant_mean`),
+   yielding exact fleet-level mean/variance/histogram as if every raw
+   sample had been uploaded.
+
+`merge_moments_reference` is the sequential pairwise (Chan et al.) merge,
+kept as the oracle the batched path is tested against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable
+
+import numpy as np
+
+from repro.core.user import User
+from repro.fleet.rounds import pump_until_deadline
+from repro.kernels.ops import merge_histograms, merge_moments
+
+#: Payload template executed inside every vehicle's task container: fold a
+#: signal window through Welford + fixed bins, publish the sketch only.
+ANALYTICS_PAYLOAD = """
+import autospada
+import numpy as np
+
+p = autospada.get_parameters()
+sig = p["signal"]
+xs = autospada.get_signal_window(sig, int(p["window"]))
+x = np.asarray(xs, dtype=np.float64)
+count = 0
+mean = 0.0
+m2 = 0.0
+for v in x:
+    count += 1
+    d = float(v) - mean
+    mean += d / count
+    m2 += d * (float(v) - mean)
+nb = int(p["bins"])
+lo = float(p["lo"])
+hi = float(p["hi"])
+if count:
+    width = (hi - lo) / nb
+    idx = np.clip(((x - lo) / width).astype(np.int64), 0, nb - 1)
+    hist = np.bincount(idx, minlength=nb)
+else:
+    hist = np.zeros((nb,), np.int64)
+autospada.publish({
+    "window_id": int(p["window_id"]),
+    "signal": sig,
+    "count": int(count),
+    "mean": float(mean),
+    "m2": float(m2),
+    "hist": [int(v) for v in hist],
+})
+"""
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticsConfig:
+    """One streaming-statistics campaign over a vehicle signal."""
+
+    signal: str = "Vehicle.FuelRate"
+    window: int = 64        # on-vehicle samples folded per sketch
+    bins: int = 16          # fixed-bin histogram resolution
+    lo: float = 0.0         # histogram support (clipped at the edges);
+    hi: float = 12.0        # default spans the drive-cycle fuel-rate range
+    deadline_fraction: float = 0.9
+    deadline_pumps: int | None = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowStats:
+    """Fleet-level statistics of one analytics window."""
+
+    window_id: int
+    participants: int
+    canceled: int
+    pumps: int
+    count: int          # pooled on-vehicle samples behind this window
+    mean: float
+    var: float          # population variance of the pooled samples
+    hist: np.ndarray    # (bins,) pooled fixed-bin counts
+
+    @property
+    def std(self) -> float:
+        return float(np.sqrt(max(self.var, 0.0)))
+
+
+def merge_moments_reference(
+    sketches: Iterable[tuple[float, float, float]]
+) -> tuple[float, float, float]:
+    """Sequential pairwise Chan merge of (count, mean, M2) sketches — the
+    per-client loop the batched `kernels.ops.merge_moments` replaces, kept
+    as the correctness oracle."""
+    c, mean, m2 = 0.0, 0.0, 0.0
+    for ci, mi, m2i in sketches:
+        ci = float(ci)
+        if ci <= 0:
+            continue
+        tot = c + ci
+        delta = mi - mean
+        mean += delta * ci / tot
+        m2 += m2i + delta * delta * c * ci / tot
+        c = tot
+    return c, mean, m2
+
+
+class AnalyticsDriver:
+    """Runs windowed streaming-statistics assignments through the platform
+    (the analytics sibling of `FederatedDriver`)."""
+
+    def __init__(self, user: User, cfg: AnalyticsConfig):
+        self.user = user
+        self.cfg = cfg
+        self.history: list[WindowStats] = []
+        #: raw per-vehicle sketches of the most recent window (tests replay
+        #: the batched merge against the sequential reference with these)
+        self.last_sketches: list[dict[str, Any]] = []
+
+    def run_window(self, window_id: int, pump: Callable[[], None]) -> WindowStats:
+        cfg = self.cfg
+        clients = self.user.online_clients()
+        payload = self.user.payload(
+            ANALYTICS_PAYLOAD, name=f"analytics-w{window_id}"
+        )
+        # one immutable Parameters doc shared by every task — the sketch
+        # spec is fleet-wide, unlike FedAvg's per-client data seeds
+        params = self.user.parameter(
+            {
+                "signal": cfg.signal,
+                "window": cfg.window,
+                "bins": cfg.bins,
+                "lo": cfg.lo,
+                "hi": cfg.hi,
+                "window_id": window_id,
+            }
+        )
+        tasks = [self.user.task(c, payload, params) for c in clients]
+        assign = self.user.assignment(
+            f"analytics window {window_id}", tasks
+        ).commit()
+        need = max(1, int(len(clients) * cfg.deadline_fraction))
+        pumps = pump_until_deadline(
+            assign,
+            len(clients),
+            need=need,
+            budget=cfg.deadline_pumps,
+            pump=pump,
+        )
+        canceled = assign.cancel()
+        sketches = []
+        for values in assign.results().values():
+            for v in values:
+                if (
+                    isinstance(v, dict)
+                    and v.get("window_id") == window_id
+                    and "m2" in v
+                ):
+                    sketches.append(v)
+        self.last_sketches = sketches
+        rec = self._merge(window_id, sketches, canceled=canceled, pumps=pumps)
+        self.history.append(rec)
+        return rec
+
+    def _merge(
+        self,
+        window_id: int,
+        sketches: list[dict[str, Any]],
+        *,
+        canceled: int,
+        pumps: int,
+    ) -> WindowStats:
+        """Server side: one batched jit merge over the client axis."""
+        if not sketches:
+            return WindowStats(
+                window_id, 0, canceled, pumps, 0, float("nan"), float("nan"),
+                np.zeros((self.cfg.bins,), np.int64),
+            )
+        counts = np.asarray([s["count"] for s in sketches], np.float32)
+        means = np.asarray([s["mean"] for s in sketches], np.float32)
+        m2s = np.asarray([s["m2"] for s in sketches], np.float32)
+        hists = np.asarray([s["hist"] for s in sketches], np.int64)
+        c, mean, m2 = merge_moments(counts, means, m2s)
+        hist = merge_histograms(hists)
+        if c <= 0:
+            # every vehicle sketched zero samples (e.g. an unknown signal):
+            # there is no statistic to report, same as the no-sketches case
+            mean, var = float("nan"), float("nan")
+        else:
+            var = m2 / c
+        return WindowStats(
+            window_id=window_id,
+            participants=len(sketches),
+            canceled=canceled,
+            pumps=pumps,
+            count=int(c),
+            mean=mean,
+            var=var,
+            hist=hist,
+        )
+
+    # ------------------------------------------------------------------ #
+    def format_table(self) -> str:
+        head = (
+            f"{'window':>6} {'clients':>8} {'canceled':>9} {'samples':>8} "
+            f"{'mean':>9} {'std':>8}  histogram"
+        )
+        lines = [head]
+        for r in self.history:
+            total = max(1, int(r.hist.sum()))
+            bar = "".join(
+                " .:-=+*#%@"[min(9, int(10 * v / total))] for v in r.hist
+            )
+            lines.append(
+                f"{r.window_id:>6} {r.participants:>8} {r.canceled:>9} "
+                f"{r.count:>8} {r.mean:>9.3f} {r.std:>8.3f}  [{bar}]"
+            )
+        return "\n".join(lines)

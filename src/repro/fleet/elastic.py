@@ -3,10 +3,17 @@ no availability assumption is ever made).
 
 The pool owns the simulated fleet: each vehicle is an EdgeClient over its
 own LocalDisk (so a returning vehicle resumes with its cached state) plus
-a scripted signal broker. `pump()` advances every *online* vehicle's sync
-loop; offline vehicles simply do not run — exactly a vehicle with the
-ignition off. Deterministic dropout schedules make the fault-tolerance
-tests reproducible.
+a signal source. Signals come in two flavours:
+
+* **plane-backed** (the fleet-scale default): every vehicle's broker is a
+  `PlaneSignalView` — a row of one columnar `FleetSignalPlane` advanced by
+  a single step per tick (`tick_signals`), not n per-vehicle iterators;
+* **scripted** (`signal_fn`): the legacy per-vehicle `ScriptedSignalBroker`
+  path, kept for tests and bespoke scripting.
+
+`pump()` advances every *online* vehicle's sync loop; offline vehicles
+simply do not run — exactly a vehicle with the ignition off. Deterministic
+dropout schedules make the fault-tolerance tests reproducible.
 """
 from __future__ import annotations
 
@@ -17,7 +24,12 @@ import numpy as np
 
 from repro.core.broker import Broker
 from repro.core.client import EdgeClient, LocalDisk
-from repro.core.signals import ScriptedSignalBroker, constant
+from repro.core.signals import (
+    FleetSignalPlane,
+    ScriptedSignalBroker,
+    SignalBroker,
+    constant,
+)
 from repro.core.statestore import StateStore
 
 
@@ -25,7 +37,7 @@ from repro.core.statestore import StateStore
 class Vehicle:
     client_id: str
     disk: LocalDisk
-    signals: ScriptedSignalBroker
+    signals: SignalBroker
     client: EdgeClient | None = None  # None => powered off
     metadata: dict[str, Any] = field(default_factory=dict)
 
@@ -39,13 +51,17 @@ class FleetPool:
         *,
         n_vehicles: int,
         signal_fn: Callable[[int], dict] | None = None,
+        plane: FleetSignalPlane | None = None,
         seed: int = 0,
     ):
+        if signal_fn is not None and plane is not None:
+            raise ValueError("pass signal_fn or plane, not both")
         self.store = store
         self.broker = broker
         self.server = server
         self.rng = np.random.default_rng(seed)
         self._signal_fn = signal_fn
+        self.plane = plane
         self._next_index = 0
         self.vehicles: dict[str, Vehicle] = {}
         for _ in range(n_vehicles):
@@ -54,16 +70,23 @@ class FleetPool:
     # -- fleet membership ----------------------------------------------- #
     def _make_vehicle(self, i: int) -> Vehicle:
         cid = f"veh-{i:03d}"
-        signals = ScriptedSignalBroker(
-            self._signal_fn(i)
-            if self._signal_fn
-            else {"Vehicle.RoadGrade": constant(0.1 * i)}
-        )
+        if self.plane is not None:
+            while i >= self.plane.n_clients:
+                self.plane.add_client()
+            signals: SignalBroker = self.plane.view(i)
+            sensors = list(self.plane.names)
+        else:
+            signals = ScriptedSignalBroker(
+                self._signal_fn(i)
+                if self._signal_fn
+                else {"Vehicle.RoadGrade": constant(0.1 * i)}
+            )
+            sensors = ["Vehicle.RoadGrade"]
         return Vehicle(
             client_id=cid,
             disk=LocalDisk(),
             signals=signals,
-            metadata={"sensors": ["Vehicle.RoadGrade"], "index": i},
+            metadata={"sensors": sensors, "index": i},
         )
 
     def add_vehicle(self) -> str:
@@ -101,6 +124,21 @@ class FleetPool:
         return [cid for cid, v in self.vehicles.items() if v.client is not None]
 
     # -- simulation ------------------------------------------------------#
+    def tick_signals(self, *, online_only: bool = False) -> None:
+        """Advance the fleet's signals one tick: a single columnar plane
+        step when plane-backed (the vectorized hot path; plane time is
+        fleet-global, so every row advances), else the legacy per-vehicle
+        iterator loop. `online_only` preserves the scripted-path semantics
+        of the simulator, where a powered-off vehicle's iterators pause
+        until the ignition returns."""
+        if self.plane is not None:
+            self.plane.step()
+            return
+        for v in self.vehicles.values():
+            if online_only and v.client is None:
+                continue
+            v.signals.tick()
+
     def pump(self, dropout_prob: float = 0.0) -> None:
         """One world step: random dropout/return, signal ticks, sync loops."""
         for cid, v in self.vehicles.items():
@@ -109,7 +147,7 @@ class FleetPool:
                     self.power_on(cid)
                 else:
                     self.power_off(cid)
+        self.tick_signals()
         for v in self.vehicles.values():
-            v.signals.tick()
             if v.client is not None:
                 v.client.run_until_idle()

@@ -83,9 +83,10 @@ class FleetMetrics:
                 f"{r.canceled:>9} {r.ticks:>6} {r.dropped:>8} {loss:>10} {dist:>8}"
             )
         s = self.summary()
-        lines.append(
-            f"-- {s['rounds']} rounds, {s['total_participants']} client-rounds, "
-            f"{s['clients_per_sec']:.0f} clients/s, "
-            f"{s['dropped']} notifications dropped"
-        )
+        if s["rounds"]:
+            lines.append(
+                f"-- {s['rounds']} rounds, {s['total_participants']} client-rounds, "
+                f"{s['clients_per_sec']:.0f} clients/s, "
+                f"{s['dropped']} notifications dropped"
+            )
         return "\n".join(lines)

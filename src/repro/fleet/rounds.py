@@ -24,8 +24,41 @@ import jax
 import numpy as np
 
 from repro.core.documents import TaskStatus
-from repro.core.user import User
+from repro.core.user import AssignmentDoc, User
 from repro.fleet.federated import FedConfig
+
+
+# --------------------------------------------------------------------- #
+# shared deadline-driven assignment pump (FedAvg rounds, analytics       #
+# windows — every platform workload closes rounds the same way)          #
+# --------------------------------------------------------------------- #
+def pump_until_deadline(
+    assign: AssignmentDoc,
+    n_tasks: int,
+    *,
+    need: int,
+    budget: int | None,
+    pump: Callable[[], None],
+) -> int:
+    """Pump the world until `need` tasks are FINISHED, every task is
+    terminal, or the pump `budget` expires (the paper's wall-clock round
+    deadline: close on time with whatever arrived). Returns pumps used.
+    Raises TimeoutError only for unbounded waits that never quiesce."""
+    hard = budget if budget is not None else 100_000
+    pumps = 0
+    for pumps in range(1, hard + 1):
+        pump()
+        statuses = assign.statuses()
+        done = sum(s == TaskStatus.FINISHED.value for s in statuses.values())
+        dead = sum(
+            s in (TaskStatus.ERROR.value, TaskStatus.CANCELED.value)
+            for s in statuses.values()
+        )
+        if done >= need or done + dead == n_tasks:
+            return pumps
+    if budget is None:  # pragma: no cover
+        raise TimeoutError("assignment did not reach its deadline quorum")
+    return pumps
 
 
 # --------------------------------------------------------------------- #
@@ -141,6 +174,7 @@ autospada.publish({
     "s": [float(v) for v in s[:, 0]],
     "n": int(n),
     "row": row,
+    "n_samples": int(p["n_samples"]),
     "loss": float(np.mean((X @ w - y) ** 2)),
 })
 """
@@ -158,6 +192,7 @@ class FederatedDriver:
         *,
         bias_signal: str = "Vehicle.RoadGrade",
         n_samples: int = 64,
+        n_samples_fn: Callable[[int], int] | None = None,
     ):
         self.user = user
         self.cfg = cfg
@@ -165,20 +200,28 @@ class FederatedDriver:
         self.w_true = w_true
         self.bias_signal = bias_signal
         self.n_samples = n_samples
+        #: optional per-client dataset size (by client index within the
+        #: round) — realistic fleets are data-heterogeneous, and FedAvg
+        #: weights the aggregate by sample count
+        self.n_samples_fn = n_samples_fn
         self.history: list[dict[str, Any]] = []
+        #: raw packed deltas of the most recent round (exposed so tests can
+        #: replay the aggregation against the reference loop)
+        self.last_msgs: list[dict[str, Any]] = []
 
     def run_round(self, rnd: int, pump: Callable[[], None]) -> dict[str, Any]:
         clients = self.user.online_clients()
         payload = self.user.payload(ROUND_PAYLOAD, name=f"fedavg-r{rnd}")
         tasks = []
         for i, c in enumerate(clients):
+            ns = self.n_samples_fn(i) if self.n_samples_fn else self.n_samples
             params = self.user.parameter(
                 {
                     "weights": [float(v) for v in self.w],
                     "w_true": [float(v) for v in self.w_true],
                     "bias_signal": self.bias_signal,
                     "data_seed": 1000 * rnd + i,
-                    "n_samples": self.n_samples,
+                    "n_samples": int(ns),
                     "local_lr": self.cfg.local_lr,
                     "local_steps": self.cfg.local_steps,
                     "round": rnd,
@@ -188,45 +231,39 @@ class FederatedDriver:
         assign = self.user.assignment(f"fedavg round {rnd}", tasks).commit()
 
         need = max(1, int(len(clients) * self.cfg.deadline_fraction))
-        budget = (
-            self.cfg.deadline_pumps
-            if self.cfg.deadline_pumps is not None
-            else 100_000
+        pumps = pump_until_deadline(
+            assign,
+            len(clients),
+            need=need,
+            budget=self.cfg.deadline_pumps,
+            pump=pump,
         )
-        msgs, losses = [], []
-        pumps = 0
-        for pumps in range(1, budget + 1):
-            pump()
-            statuses = assign.statuses()
-            done = [t for t, s in statuses.items() if s == TaskStatus.FINISHED.value]
-            dead = [
-                t
-                for t, s in statuses.items()
-                if s in (TaskStatus.ERROR.value, TaskStatus.CANCELED.value)
-            ]
-            if len(done) >= need or len(done) + len(dead) == len(clients):
-                break
-        else:
-            if self.cfg.deadline_pumps is None:  # pragma: no cover
-                raise TimeoutError("round did not reach its deadline quorum")
-            # wall-clock deadline expired (paper semantics: the round closes
-            # on time with whatever arrived; stragglers get canceled below)
         # deadline reached: cancel stragglers (paper lifecycle semantics)
         canceled = assign.cancel()
+        msgs, losses = [], []
         for task_id, values in assign.results().items():
             for v in values:
                 if isinstance(v, dict) and v.get("round") == rnd and "q" in v:
                     msgs.append(v)
                     losses.append(v.get("loss", float("nan")))
+        self.last_msgs = msgs
+        weights = None
         if msgs:
+            # FedAvg proper: weight each client's delta by its local sample
+            # count (uploads carry n_samples; legacy results without it
+            # count as 1). Uniform counts reduce to the plain mean.
+            weights = np.asarray(
+                [float(m.get("n_samples", 1)) for m in msgs], np.float32
+            )
             # batched path: one fused dequant + weighted-sum over clients
-            mean_delta = aggregate_packed(msgs)
+            mean_delta = aggregate_packed(msgs, weights)
             self.w = self.w + self.cfg.server_lr * mean_delta
         rec = {
             "round": rnd,
             "participants": len(msgs),
             "canceled": canceled,
             "pumps": pumps,
+            "weights": None if weights is None else [float(v) for v in weights],
             "mean_client_loss": float(np.mean(losses)) if losses else None,
             "dist_to_optimum": float(np.linalg.norm(self.w - self.w_true)),
         }

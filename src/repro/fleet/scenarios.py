@@ -1,0 +1,217 @@
+"""Seeded drive-cycle scenario generators for the fleet signal plane.
+
+The paper's operational case study is streaming statistics over
+fuel-consumption signals from real driving; the old simulator fed every
+vehicle a hand-rolled ``constant(0.01 * (i % 7))`` road-grade iterator.
+These generators produce physically-flavoured, *seeded* signal streams for
+the whole fleet at once — each scenario is a pure function
+``(seed, client, t) -> signals`` evaluated as one jit step over the
+``(n_clients, n_signals)`` plane per tick:
+
+* ``highway``    — cruise near a per-vehicle set speed with slow speed and
+                   road-grade oscillation;
+* ``urban``      — stop-go duty cycles: accelerate, brake, idle at lights;
+* ``idle``       — cold idle: stationary, warming engine, idle fuel burn;
+* ``mixed``      — every vehicle seeded into one of the above regimes
+                   (the realistic fleet default for analytics);
+* ``road-grade`` — the legacy constant per-vehicle grade (exactly
+                   ``0.01 * (i % 7)``), time-invariant: the simulator's
+                   default, preserving the fault-free == lossy aggregate
+                   property that the resiliency tests pin down.
+
+Determinism and row stability: per-client randomness is derived with
+``fold_in(key(seed), client_index)`` and per-tick noise with a further
+``fold_in(·, t)``, so the same (seed, i) yields the same stream at any
+fleet size — a vehicle joining mid-experiment never perturbs existing
+rows (`FleetSignalPlane.add_client` relies on this).
+
+`scripted_brokers` renders the same streams through the legacy
+per-vehicle `ScriptedSignalBroker` path; the parity tests prove the two
+pipelines are payload-indistinguishable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.signals import FleetSignalPlane, ScriptedSignalBroker
+
+#: canonical signal names every scenario publishes, column order fixed
+SIGNALS: tuple[str, ...] = (
+    "Vehicle.Speed",          # km/h
+    "Vehicle.FuelRate",       # L/h
+    "Vehicle.RoadGrade",      # dimensionless slope
+    "Engine.Temperature",     # deg C
+)
+
+_HIGHWAY, _URBAN, _IDLE = 0, 1, 2
+
+#: regime mix of the ``mixed`` fleet
+_MIX = (0.45, 0.35, 0.20)
+
+SCENARIOS = ("road-grade", "highway", "urban", "idle", "mixed")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A named, seeded drive-cycle family. `series(n)` returns the plane
+    step: a callable `t -> (n, len(SIGNALS))` float32 matrix."""
+
+    name: str
+    seed: int = 0
+    signals: tuple[str, ...] = SIGNALS
+
+    def series(self, n_clients: int) -> Callable[[int], np.ndarray]:
+        if self.name == "road-grade":
+            return _constant_road_grade_series(n_clients)
+        if self.name not in SCENARIOS:
+            raise ValueError(
+                f"unknown scenario {self.name!r}; pick one of {SCENARIOS}"
+            )
+        return _drive_cycle_series(self.name, n_clients, self.seed)
+
+    def plane(self, n_clients: int, *, history: int = 256) -> FleetSignalPlane:
+        return FleetSignalPlane(
+            self.signals,
+            self.series(n_clients),
+            history=history,
+            grow_fn=self.series,
+        )
+
+
+def build_plane(
+    name: str, n_clients: int, seed: int = 0, *, history: int = 256
+) -> FleetSignalPlane:
+    """The one-liner the simulator uses."""
+    return Scenario(name, seed).plane(n_clients, history=history)
+
+
+# --------------------------------------------------------------------- #
+# the legacy constant default                                            #
+# --------------------------------------------------------------------- #
+def _constant_road_grade_series(n: int) -> Callable[[int], np.ndarray]:
+    """Time-invariant per-vehicle signals; `Vehicle.RoadGrade` reproduces
+    the historical ``constant(0.01 * (i % 7))`` exactly. Constant in t so
+    runs whose rounds consume different tick counts (lossy vs fault-free)
+    still see identical payload inputs."""
+    i = np.arange(n, dtype=np.float32)
+    grade = np.float32(0.01) * (i % np.float32(7))
+    speed = np.full(n, 80.0, np.float32)
+    fuel = (0.6 + 0.04 * speed + 60.0 * np.maximum(grade, 0.0)).astype(np.float32)
+    temp = np.full(n, 90.0, np.float32)
+    vals = np.stack([speed, fuel, grade, temp], axis=1).astype(np.float32)
+
+    def series(t: int) -> np.ndarray:
+        return vals
+
+    return series
+
+
+# --------------------------------------------------------------------- #
+# drive cycles: one jit step for the whole fleet                         #
+# --------------------------------------------------------------------- #
+def _drive_cycle_series(
+    name: str, n: int, seed: int
+) -> Callable[[int], np.ndarray]:
+    base = jax.random.PRNGKey(seed)
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    ckeys = jax.vmap(lambda i: jax.random.fold_in(base, i))(idx)
+    u = jax.vmap(lambda k: jax.random.uniform(k, (6,)))(ckeys)  # (n, 6)
+
+    if name == "mixed":
+        c0, c1 = _MIX[0], _MIX[0] + _MIX[1]
+        regime = jnp.where(u[:, 0] < c0, _HIGHWAY, jnp.where(u[:, 0] < c1, _URBAN, _IDLE))
+    else:
+        regime = jnp.full(
+            (n,), {"highway": _HIGHWAY, "urban": _URBAN, "idle": _IDLE}[name],
+            jnp.int32,
+        )
+
+    cruise = 95.0 + 25.0 * u[:, 1]        # highway set speed, km/h
+    peak = 28.0 + 24.0 * u[:, 1]          # urban peak between stops
+    hw_period = 40.0 + 40.0 * u[:, 2]     # highway oscillation, ticks
+    ub_period = 8.0 + 10.0 * u[:, 2]      # urban stop-go cycle, ticks
+    phase = 2.0 * jnp.pi * u[:, 3]
+    grade0 = 0.06 * (u[:, 4] - 0.5)
+    noise = 0.3 + 0.7 * u[:, 5]
+
+    @jax.jit
+    def step(t: jax.Array) -> jax.Array:
+        tf = t.astype(jnp.float32)
+        tkeys = jax.vmap(lambda k: jax.random.fold_in(k, t))(ckeys)
+        eps = jax.vmap(lambda k: jax.random.normal(k, (2,)))(tkeys)  # (n, 2)
+
+        # highway: cruise + slow sinusoid + noise
+        v_hw = cruise + 8.0 * jnp.sin(2.0 * jnp.pi * tf / hw_period + phase)
+        v_hw = v_hw + noise * eps[:, 0]
+        # urban: duty cycle — moving 60% of the cycle, stopped at "lights"
+        frac = jnp.mod(tf / ub_period + phase / (2.0 * jnp.pi), 1.0)
+        moving = frac < 0.6
+        v_ub = jnp.where(
+            moving,
+            peak * jnp.sin(jnp.pi * frac / 0.6) + 0.5 * noise * eps[:, 0],
+            0.0,
+        )
+        speed = jnp.select(
+            [regime == _HIGHWAY, regime == _URBAN], [v_hw, v_ub], 0.0
+        )
+        speed = jnp.maximum(speed, 0.0)
+
+        grade_osc = 0.02 * jnp.sin(2.0 * jnp.pi * tf / (3.0 * hw_period) + 2.0 * phase)
+        grade = jnp.where(regime == _IDLE, 0.0, grade0 + grade_osc)
+
+        # fuel rate: idle burn + speed term + uphill load + combustion noise
+        fuel = (
+            0.6
+            + 0.04 * speed
+            + 1.2 * jnp.maximum(grade, 0.0) * speed
+            + 0.05 * noise * eps[:, 1]
+        )
+        fuel = jnp.maximum(fuel, 0.15)
+
+        # engine warmup toward the regime's steady temperature
+        ambient = jnp.where(regime == _IDLE, -5.0, 15.0)
+        target = jnp.where(regime == _IDLE, 55.0, 90.0)
+        tau = jnp.where(regime == _IDLE, 120.0, 40.0)
+        temp = ambient + (target - ambient) * (1.0 - jnp.exp(-tf / tau))
+
+        return jnp.stack([speed, fuel, grade, temp], axis=1).astype(jnp.float32)
+
+    def series(t: int) -> np.ndarray:
+        return np.asarray(step(jnp.int32(t)))
+
+    return series
+
+
+# --------------------------------------------------------------------- #
+# legacy-path adapters (parity testing, per-vehicle scripting)           #
+# --------------------------------------------------------------------- #
+def scenario_trace(
+    scenario: Scenario, n_clients: int, n_ticks: int
+) -> np.ndarray:
+    """Materialize `(n_ticks, n_clients, n_signals)` of the scenario —
+    tick 0 is the plane's initial state."""
+    series = scenario.series(n_clients)
+    return np.stack([series(t) for t in range(n_ticks)], axis=0)
+
+
+def scripted_brokers(
+    scenario: Scenario, n_clients: int, n_ticks: int
+) -> list[ScriptedSignalBroker]:
+    """The same streams through the legacy per-vehicle iterator path.
+    Broker i's iterator for signal j yields the identical float32 values
+    the plane's row i column j takes at ticks 0..n_ticks-1 (then holds)."""
+    trace = scenario_trace(scenario, n_clients, n_ticks)
+    return [
+        ScriptedSignalBroker(
+            {
+                name: iter([float(v) for v in trace[:, i, j]])
+                for j, name in enumerate(scenario.signals)
+            }
+        )
+        for i in range(n_clients)
+    ]

@@ -16,7 +16,10 @@ Time is an integer tick. One `tick()`:
 
 1. applies churn decisions from the simulation RNG (seeded);
 2. advances the broker clock, releasing delayed messages (`Broker.advance`);
-3. gives every online client a bounded amount of sync-loop work
+3. advances the fleet's signals — ONE columnar `FleetSignalPlane` step
+   (a jit'd drive-cycle scenario from `repro.fleet.scenarios`) instead of
+   the old O(n_clients × n_signals) per-vehicle iterator loop;
+4. gives every online client a bounded amount of sync-loop work
    (`EdgeClient.advance(steps_per_tick)`), staggered so stragglers run at
    a fraction of the fleet rate; idle clients periodically dial in
    (`resync`) — the paper's recovery story for dropped QoS-0
@@ -38,12 +41,13 @@ import numpy as np
 
 from repro.core.broker import Broker, seeded_fault_plan
 from repro.core.server import make_platform
-from repro.core.signals import constant
 from repro.core.user import User
+from repro.fleet.analytics import AnalyticsConfig, AnalyticsDriver
 from repro.fleet.elastic import FleetPool
 from repro.fleet.federated import FedConfig
 from repro.fleet.metrics import FleetMetrics, RoundMetrics
 from repro.fleet.rounds import FederatedDriver
+from repro.fleet.scenarios import build_plane
 
 
 @dataclass(frozen=True)
@@ -52,6 +56,14 @@ class SimConfig:
 
     n_clients: int = 32
     seed: int = 0
+    # -- signals --------------------------------------------------------- #
+    #: drive-cycle scenario feeding the columnar signal plane
+    #: (repro.fleet.scenarios.SCENARIOS). The default is the legacy
+    #: time-invariant per-vehicle road grade, so rounds that consume
+    #: different tick counts (lossy vs fault-free) see identical signals.
+    scenario: str = "road-grade"
+    #: plane history ring depth (backs `autospada.get_signal_window`)
+    signal_history: int = 256
     # -- broker faults -------------------------------------------------- #
     p_drop: float = 0.0        # QoS-0 notification drop probability
     p_duplicate: float = 0.0   # QoS-1 redelivery probability
@@ -88,13 +100,26 @@ class FleetSimulator:
         )
         self.broker = Broker(faults)
         self.store, _, (self.server,) = make_platform(broker=self.broker)
+        # Signals: an explicit signal_fn keeps the legacy per-vehicle
+        # scripted path; otherwise the whole fleet shares one columnar
+        # signal plane seeded from the configured drive-cycle scenario.
+        self.plane = (
+            None
+            if signal_fn is not None
+            else build_plane(
+                cfg.scenario,
+                cfg.n_clients,
+                cfg.seed,
+                history=cfg.signal_history,
+            )
+        )
         self.pool = FleetPool(
             self.store,
             self.broker,
             self.server,
             n_vehicles=cfg.n_clients,
-            signal_fn=signal_fn
-            or (lambda i: {"Vehicle.RoadGrade": constant(0.01 * (i % 7))}),
+            signal_fn=signal_fn,
+            plane=self.plane,
             seed=cfg.seed,
         )
         self.user = User(self.server, self.broker)
@@ -137,12 +162,16 @@ class FleetSimulator:
                     self.pool.power_on(cid)
         # 2. release delayed broker deliveries due at this tick
         self.broker.advance(1)
-        # 3. bounded sync-loop service per online client
+        # 3. advance the whole fleet's signals: ONE columnar plane step
+        #    (the old path ticked n_clients iterator brokers in Python).
+        #    Scripted signals keep the historical behaviour: a powered-off
+        #    vehicle's iterators pause until the ignition returns.
+        self.pool.tick_signals(online_only=True)
+        # 4. bounded sync-loop service per online client
         for i, (cid, v) in enumerate(self.pool.vehicles.items()):
             c = v.client
             if c is None:
                 continue
-            v.signals.tick()
             if cid in self._stragglers and (self.t + i) % cfg.straggler_period:
                 continue  # straggler: skips this tick's service slot
             if c.idle and (self.t + i) % cfg.resync_period == 0:
@@ -197,6 +226,48 @@ class FleetSimulator:
                     wall_s=time.perf_counter() - t0,
                     mean_client_loss=rec["mean_client_loss"],
                     dist_to_optimum=rec["dist_to_optimum"],
+                )
+            )
+        return driver
+
+    # ------------------------------------------------------------------ #
+    # streaming-analytics campaign (the paper's data-analytics use case)  #
+    # ------------------------------------------------------------------ #
+    def run_analytics(
+        self,
+        cfg: AnalyticsConfig,
+        *,
+        windows: int = 5,
+        warmup_ticks: int = 0,
+    ) -> AnalyticsDriver:
+        """Run `windows` streaming-statistics assignments over the fleet:
+        vehicles fold their signal windows into Welford/histogram sketches
+        on-board; the server merges all sketches in one batched jit
+        reduction per window. `warmup_ticks` advances the world first so
+        the signal plane's history ring has data to window over."""
+        for _ in range(warmup_ticks):
+            self.tick()
+        driver = AnalyticsDriver(self.user, cfg)
+        for w in range(windows):
+            online = len(self.pool.online())
+            t0, tick0 = time.perf_counter(), self.t
+            pub0, del0, drop0 = (
+                self.broker.published,
+                self.broker.delivered,
+                self.broker.dropped,
+            )
+            rec = driver.run_window(w, pump=self.tick)
+            self.metrics.record(
+                RoundMetrics(
+                    round=w,
+                    online_at_start=online,
+                    participants=rec.participants,
+                    canceled=rec.canceled,
+                    ticks=self.t - tick0,
+                    published=self.broker.published - pub0,
+                    delivered=self.broker.delivered - del0,
+                    dropped=self.broker.dropped - drop0,
+                    wall_s=time.perf_counter() - t0,
                 )
             )
         return driver

@@ -1,11 +1,20 @@
 """Run the fleet simulator from the command line.
 
+Federated learning (the default workload):
+
     PYTHONPATH=src python -m repro.launch.fleet --clients 1024 --rounds 5 \
         --drop 0.05 --duplicate 0.02 --delay 2 --stragglers 0.1
 
-Prints the per-round metrics table and the fleet summary. Everything is a
-deterministic function of --seed: re-running with identical flags gives an
-identical final aggregate (printed as a checksum so drift is visible).
+Streaming analytics (the paper's data-analytics case study — on-vehicle
+Welford/histogram sketches over a drive-cycle signal, merged server-side
+in one batched jit reduction per window):
+
+    PYTHONPATH=src python -m repro.launch.fleet --workload analytics \
+        --clients 256 --scenario mixed --signal Vehicle.FuelRate --rounds 6
+
+Prints the per-round metrics table and the workload summary. Everything is
+a deterministic function of --seed: re-running with identical flags gives
+an identical final aggregate (printed as a checksum so drift is visible).
 """
 from __future__ import annotations
 
@@ -13,15 +22,24 @@ import argparse
 
 import numpy as np
 
+from repro.fleet.analytics import AnalyticsConfig
 from repro.fleet.federated import FedConfig
+from repro.fleet.scenarios import SCENARIOS
 from repro.fleet.simulator import FleetSimulator, SimConfig
 
 
 def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workload", choices=("federated", "analytics"),
+                    default="federated")
     ap.add_argument("--clients", type=int, default=256)
-    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--rounds", type=int, default=5,
+                    help="FedAvg rounds / analytics windows")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenario", choices=SCENARIOS, default=None,
+                    help="drive-cycle scenario for the signal plane "
+                         "(default: road-grade for federated, mixed for "
+                         "analytics)")
     ap.add_argument("--dim", type=int, default=32, help="model dimension")
     ap.add_argument("--drop", type=float, default=0.0, help="QoS-0 drop prob")
     ap.add_argument("--duplicate", type=float, default=0.0, help="QoS-1 dup prob")
@@ -35,15 +53,28 @@ def build_parser() -> argparse.ArgumentParser:
                     help="fraction of clients awaited per round")
     ap.add_argument("--deadline-pumps", type=int, default=64,
                     help="hard per-round tick budget")
+    # analytics knobs
+    ap.add_argument("--signal", default="Vehicle.FuelRate",
+                    help="signal the analytics workload sketches")
+    ap.add_argument("--window", type=int, default=64,
+                    help="on-vehicle samples per sketch")
+    ap.add_argument("--bins", type=int, default=16,
+                    help="fixed-bin histogram resolution")
+    ap.add_argument("--warmup-ticks", type=int, default=16,
+                    help="world ticks before the first analytics window")
     return ap
 
 
 def main() -> None:
     args = build_parser().parse_args()
+    scenario = args.scenario or (
+        "mixed" if args.workload == "analytics" else "road-grade"
+    )
     sim = FleetSimulator(
         SimConfig(
             n_clients=args.clients,
             seed=args.seed,
+            scenario=scenario,
             p_drop=args.drop,
             p_duplicate=args.duplicate,
             max_delay=args.delay,
@@ -52,6 +83,28 @@ def main() -> None:
             straggler_fraction=args.stragglers,
         )
     )
+    if args.workload == "analytics":
+        driver = sim.run_analytics(
+            AnalyticsConfig(
+                signal=args.signal,
+                window=args.window,
+                bins=args.bins,
+                deadline_fraction=args.deadline,
+                deadline_pumps=args.deadline_pumps,
+            ),
+            windows=args.rounds,
+            warmup_ticks=args.warmup_ticks,
+        )
+        print(sim.metrics.format_table())
+        print(driver.format_table())
+        if driver.history:
+            last = driver.history[-1]
+            print(
+                f"fleet {args.signal}: mean={last.mean:.4f} std={last.std:.4f} "
+                f"over {last.count} on-vehicle samples "
+                f"(checksum {last.mean + last.var:.6f})"
+            )
+        return
     driver = sim.run_federated(
         FedConfig(
             local_steps=3,

@@ -1,0 +1,200 @@
+"""Streaming-analytics workload: batched sketch merges vs the sequential
+reference, the end-to-end AnalyticsDriver, sample-count-weighted FedAvg,
+and the payload API satellites (signal windows, virtual-clock sleep)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import PayloadContext, User, dummy_context, make_platform
+from repro.core.signals import ScriptedSignalBroker, SignalHandler, constant
+from repro.fleet import (
+    AnalyticsConfig,
+    FedConfig,
+    FederatedDriver,
+    FleetPool,
+    FleetSimulator,
+    SimConfig,
+    aggregate_reference,
+    merge_moments_reference,
+)
+from repro.kernels.ops import merge_histograms, merge_moments
+
+
+# --------------------------------------------------------------------- #
+# batched merges vs per-client reference                                 #
+# --------------------------------------------------------------------- #
+def test_merge_moments_matches_sequential_reference():
+    rng = np.random.default_rng(0)
+    sketches = []
+    for _ in range(64):
+        x = rng.normal(loc=rng.uniform(-3, 3), scale=rng.uniform(0.1, 2), size=rng.integers(5, 200))
+        sketches.append((float(len(x)), float(np.mean(x)), float(np.var(x) * len(x))))
+    counts, means, m2s = map(np.asarray, zip(*sketches))
+    c, mean, m2 = merge_moments(counts, means, m2s)
+    cr, meanr, m2r = merge_moments_reference(sketches)
+    assert c == cr
+    assert mean == pytest.approx(meanr, rel=1e-5)
+    assert m2 == pytest.approx(m2r, rel=1e-4)
+    # and both equal the pooled ground truth computed from scratch
+    pooled_mean = float(np.sum(counts * means) / np.sum(counts))
+    assert mean == pytest.approx(pooled_mean, rel=1e-5)
+
+
+def test_merge_moments_handles_empty_sketches():
+    c, mean, m2 = merge_moments(
+        np.array([0.0, 5.0]), np.array([0.0, 2.0]), np.array([0.0, 10.0])
+    )
+    cr, meanr, m2r = merge_moments_reference([(0, 0.0, 0.0), (5, 2.0, 10.0)])
+    assert (c, mean, m2) == (cr, meanr, m2r) == (5.0, 2.0, 10.0)
+
+
+def test_merge_histograms_matches_numpy_sum():
+    rng = np.random.default_rng(1)
+    hists = rng.integers(0, 50, size=(32, 16))
+    assert np.array_equal(merge_histograms(hists), hists.sum(axis=0))
+
+
+# --------------------------------------------------------------------- #
+# the analytics workload end-to-end                                      #
+# --------------------------------------------------------------------- #
+def test_analytics_driver_end_to_end_matches_reference_merge():
+    sim = FleetSimulator(SimConfig(n_clients=8, seed=4, scenario="mixed"))
+    cfg = AnalyticsConfig(window=16, bins=8, deadline_fraction=1.0)
+    driver = sim.run_analytics(cfg, windows=2, warmup_ticks=6)
+    assert len(driver.history) == 2
+    for rec in driver.history:
+        assert rec.participants == 8
+        assert rec.count > 0
+        assert int(rec.hist.sum()) == rec.count  # support clips every sample
+    # the batched jit merge equals the sequential per-client reference
+    sk = driver.last_sketches
+    assert len(sk) == 8
+    cr, meanr, m2r = merge_moments_reference(
+        [(s["count"], s["mean"], s["m2"]) for s in sk]
+    )
+    last = driver.history[-1]
+    assert last.count == int(cr)
+    assert last.mean == pytest.approx(meanr, rel=1e-5)
+    assert last.var == pytest.approx(m2r / cr, rel=1e-4)
+    assert np.array_equal(
+        last.hist, np.sum([s["hist"] for s in sk], axis=0)
+    )
+
+
+def test_analytics_is_deterministic_in_the_seed():
+    def run():
+        sim = FleetSimulator(SimConfig(n_clients=6, seed=11, scenario="urban"))
+        d = sim.run_analytics(
+            AnalyticsConfig(window=12, bins=6, deadline_fraction=1.0),
+            windows=2,
+            warmup_ticks=4,
+        )
+        return d.history[-1]
+
+    a, b = run(), run()
+    assert (a.count, a.mean, a.var) == (b.count, b.mean, b.var)
+    assert np.array_equal(a.hist, b.hist)
+
+
+# --------------------------------------------------------------------- #
+# weighted FedAvg (satellite)                                            #
+# --------------------------------------------------------------------- #
+def test_fedavg_weights_by_sample_count_as_reference_predicts():
+    store, broker, (server,) = make_platform()
+    pool = FleetPool(
+        store, broker, server, n_vehicles=3,
+        signal_fn=lambda i: {"Vehicle.RoadGrade": constant(0.05 * i)},
+    )
+    user = User(server, broker)
+    counts = [8, 32, 120]
+    drv = FederatedDriver(
+        user,
+        FedConfig(local_steps=2, local_lr=0.2, deadline_fraction=1.0),
+        dim=6,
+        w_true=np.linspace(-1, 1, 6).astype(np.float32),
+        n_samples_fn=lambda i: counts[i],
+    )
+    rec = drv.run_round(0, pump=pool.pump)
+    assert rec["participants"] == 3
+    assert sorted(rec["weights"]) == sorted(float(c) for c in counts)
+    # the driver's update equals the reference weighted loop on the raw
+    # uploads (w started at zero, server_lr = 1)
+    msgs = drv.last_msgs
+    w = np.asarray([m["n_samples"] for m in msgs], np.float32)
+    expected = aggregate_reference(msgs, w)
+    assert np.allclose(drv.w, expected, atol=1e-6)
+    # and unequal weights genuinely change the aggregate
+    uniform = aggregate_reference(msgs)
+    assert not np.allclose(expected, uniform, atol=1e-6)
+
+
+# --------------------------------------------------------------------- #
+# payload API satellites                                                 #
+# --------------------------------------------------------------------- #
+def test_get_signal_window_through_handler_and_dummy():
+    broker = ScriptedSignalBroker({"s": iter([1.0, 2.0, 3.0, 4.0])})
+    h = SignalHandler(broker)
+    ctx = PayloadContext(
+        get_signal=h.get,
+        get_signal_window=h.window,
+        publish=lambda v: None,
+    )
+    assert ctx.get_signal("s") == 1.0
+    # push brokers record history lazily: the first window() call seeds it
+    # with the current latest value and recording continues from there
+    assert ctx.get_signal_window("s", 4) == [1.0]
+    broker.tick()
+    broker.tick()
+    assert ctx.get_signal_window("s", 2) == [2.0, 3.0]
+    assert ctx.get_signal_window("s", 99) == [1.0, 2.0, 3.0]
+    assert len(dummy_context(seed=1).get_signal_window("x", 5)) == 5
+
+
+def test_get_signal_window_falls_back_to_latest_value():
+    ctx = PayloadContext(get_signal=lambda n: 7.0, publish=lambda v: None)
+    assert ctx.get_signal_window("anything", 10) == [7.0]
+
+
+def test_sleep_with_virtual_clock_does_not_burn_wall_time():
+    """A simulated 30 s sleep must finish in (nearly) zero wall time when
+    the injected clock is virtual (satellite fix: the old implementation
+    napped 2 ms of real time per check even in simulation)."""
+    sim_time = {"t": 0.0}
+
+    def clock() -> float:
+        sim_time["t"] += 0.05  # the world advances whenever anyone looks
+        return sim_time["t"]
+
+    ctx = PayloadContext(get_signal=lambda n: None, publish=lambda v: None, clock=clock)
+    start = time.perf_counter()
+    ctx.sleep(30.0)  # 600 virtual-clock checks
+    assert time.perf_counter() - start < 0.5
+    assert sim_time["t"] >= 30.0
+
+
+def test_sleep_with_wall_clock_still_sleeps():
+    ctx = PayloadContext(get_signal=lambda n: None, publish=lambda v: None)
+    start = time.perf_counter()
+    ctx.sleep(0.03)
+    assert time.perf_counter() - start >= 0.02
+    # wrapped wall clocks can opt out of virtual-clock detection
+    wrapped = PayloadContext(
+        get_signal=lambda n: None,
+        publish=lambda v: None,
+        clock=lambda: time.monotonic(),
+        virtual_clock=False,
+    )
+    assert not wrapped._virtual_clock
+
+
+def test_analytics_unknown_signal_reports_nan_not_zero():
+    sim = FleetSimulator(SimConfig(n_clients=4, seed=2, scenario="mixed"))
+    driver = sim.run_analytics(
+        AnalyticsConfig(signal="Vehicle.DoesNotExist", deadline_fraction=1.0),
+        windows=1,
+        warmup_ticks=2,
+    )
+    rec = driver.history[0]
+    assert rec.participants == 4 and rec.count == 0
+    assert np.isnan(rec.mean) and np.isnan(rec.var)

@@ -1,0 +1,210 @@
+"""Columnar signal plane: parity with the legacy per-vehicle broker path,
+drive-cycle scenario determinism and row stability, CSV adapter
+robustness, and simulator determinism with the plane enabled."""
+import numpy as np
+import pytest
+
+from repro.core.signals import (
+    CsvSignalBroker,
+    FleetSignalPlane,
+    ScriptedSignalBroker,
+    SignalHandler,
+    parse_signal_csv,
+)
+from repro.fleet import FedConfig, FleetSimulator, SimConfig
+from repro.fleet.scenarios import (
+    SCENARIOS,
+    SIGNALS,
+    Scenario,
+    build_plane,
+    scenario_trace,
+    scripted_brokers,
+)
+
+
+# --------------------------------------------------------------------- #
+# parity: the plane-backed views are payload-indistinguishable from the  #
+# old ScriptedSignalBroker path                                          #
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ["highway", "urban", "mixed"])
+def test_plane_views_match_scripted_broker_sequences(name):
+    scen = Scenario(name, seed=13)
+    n, ticks = 5, 12
+    plane = scen.plane(n)
+    old = [SignalHandler(b) for b in scripted_brokers(scen, n, ticks + 2)]
+    new = [SignalHandler(plane.view(i)) for i in range(n)]
+    for t in range(ticks):
+        for i in range(n):
+            for sig in SIGNALS:
+                assert old[i].get(sig) == new[i].get(sig), (t, i, sig)
+                assert old[i].window(sig, 6) == new[i].window(sig, 6), (t, i, sig)
+        for h in old:
+            h._broker.tick()
+        plane.step()
+
+
+def test_plane_read_unknown_signal_is_none_like_the_old_path():
+    plane = build_plane("highway", 2, seed=0)
+    h = SignalHandler(plane.view(0))
+    assert h.get("Vehicle.DoesNotExist") is None
+    assert h.window("Vehicle.DoesNotExist", 4) == []
+
+
+# --------------------------------------------------------------------- #
+# scenarios: seeded, deterministic, row-stable under fleet growth        #
+# --------------------------------------------------------------------- #
+def test_scenarios_are_deterministic_and_seed_sensitive():
+    for name in SCENARIOS:
+        a = scenario_trace(Scenario(name, seed=3), 4, 6)
+        b = scenario_trace(Scenario(name, seed=3), 4, 6)
+        assert np.array_equal(a, b), name
+    x = scenario_trace(Scenario("mixed", seed=3), 4, 6)
+    y = scenario_trace(Scenario("mixed", seed=4), 4, 6)
+    assert not np.array_equal(x, y)
+
+
+def test_scenario_rows_stable_under_fleet_growth():
+    """A vehicle joining must never perturb existing vehicles' streams."""
+    small = scenario_trace(Scenario("mixed", seed=9), 4, 8)
+    large = scenario_trace(Scenario("mixed", seed=9), 7, 8)
+    assert np.array_equal(small, large[:, :4, :])
+
+
+def test_plane_add_client_grows_without_disturbing_existing_rows():
+    plane = build_plane("urban", 3, seed=2)
+    plane.step()
+    before = plane.values.copy()
+    row = plane.add_client()
+    assert row == 3 and plane.n_clients == 4
+    assert np.array_equal(plane.values[:3], before)
+    # the new row produces values and history from the current tick on
+    assert plane.read(3, "Vehicle.FuelRate") is not None
+    plane.step()
+    assert len(plane.window(3, "Vehicle.FuelRate", 8)) == 2
+
+
+def test_default_road_grade_scenario_matches_legacy_constants():
+    plane = build_plane("road-grade", 15, seed=0)
+    for i in range(15):
+        assert plane.read(i, "Vehicle.RoadGrade") == pytest.approx(
+            0.01 * (i % 7)
+        )
+    t0 = plane.values.copy()
+    plane.step()
+    assert np.array_equal(plane.values, t0)  # time-invariant by design
+
+
+# --------------------------------------------------------------------- #
+# CSV adapter robustness (satellite)                                     #
+# --------------------------------------------------------------------- #
+def test_csv_blank_cells_hold_previous_value_in_both_paths():
+    csv_text = "a,b\n1,2\n,3\n4,\n"
+    h = SignalHandler(CsvSignalBroker(csv_text))
+    seq = [h.get("a")]
+    for _ in range(3):
+        h._broker.tick()
+        seq.append(h.get("a"))
+    assert seq == [1.0, 1.0, 4.0, 4.0]
+    plane = FleetSignalPlane.from_csv_fleet([csv_text])
+    pseq = [plane.read(0, "a")]
+    for _ in range(3):
+        plane.step()
+        pseq.append(plane.read(0, "a"))
+    assert pseq == seq
+
+
+def test_csv_leading_blank_reads_none_until_first_observation():
+    plane = FleetSignalPlane.from_csv_fleet(["a,b\n,5\n2,6\n"])
+    assert plane.read(0, "a") is None and plane.read(0, "b") == 5.0
+    plane.step()
+    assert plane.read(0, "a") == 2.0
+
+
+def test_csv_ragged_row_raises_naming_the_row():
+    with pytest.raises(ValueError, match=r"row 2 has 3 cells, expected 2"):
+        CsvSignalBroker("a,b\n1,2\n1,2,3\n")
+
+
+def test_csv_bad_cell_raises_naming_column_and_row():
+    with pytest.raises(ValueError, match=r"column 'b', row 1.*'oops'"):
+        CsvSignalBroker("a,b\n1,oops\n")
+
+
+def test_csv_empty_raises_clear_error():
+    with pytest.raises(ValueError, match="no header"):
+        parse_signal_csv("")
+
+
+def test_csv_duplicate_header_raises_clear_error():
+    with pytest.raises(ValueError, match=r"repeats column\(s\): a"):
+        parse_signal_csv("a,a,b\n1,2,9\n")
+
+
+def test_scripted_signals_pause_while_powered_off():
+    """Legacy-path semantics the plane refactor must not change: a
+    powered-off vehicle's scripted iterators pause until ignition-on."""
+    from repro.core.signals import SignalHandler
+
+    sim = FleetSimulator(
+        SimConfig(n_clients=2, seed=0),
+        signal_fn=lambda i: {"Vehicle.Odo": iter([1.0, 2.0, 3.0, 4.0, 5.0])},
+    )
+    cid = next(iter(sim.pool.vehicles))
+    v = sim.pool.vehicles[cid]
+    h = SignalHandler(v.signals)
+    assert h.get("Vehicle.Odo") == 1.0
+    sim.tick()
+    assert h.get("Vehicle.Odo") == 2.0
+    sim.pool.power_off(cid)
+    sim.tick()
+    sim.tick()  # iterator must not advance while the ignition is off
+    sim.pool.power_on(cid)
+    sim.tick()
+    assert h.get("Vehicle.Odo") == 3.0
+
+
+def test_csv_fleet_plane_aligns_union_of_columns():
+    plane = FleetSignalPlane.from_csv_fleet(
+        ["speed,fuel\n10,1\n20,2\n", "speed\n30\n40\n"]
+    )
+    assert plane.names == ("fuel", "speed")
+    assert plane.read(1, "speed") == 30.0 and plane.read(1, "fuel") is None
+    plane.step()
+    plane.step()  # past the trace end: hold last row
+    assert plane.read(0, "speed") == 20.0 and plane.read(1, "speed") == 40.0
+
+
+# --------------------------------------------------------------------- #
+# simulator determinism with the plane enabled                           #
+# --------------------------------------------------------------------- #
+def test_simulator_with_time_varying_scenario_is_deterministic():
+    cfg = SimConfig(
+        n_clients=12, seed=21, scenario="mixed", p_drop=0.1, max_delay=1
+    )
+    fed = FedConfig(
+        local_steps=2, local_lr=0.2, deadline_fraction=0.8, deadline_pumps=32
+    )
+
+    def run():
+        sim = FleetSimulator(cfg)
+        drv = sim.run_federated(fed, dim=8, rounds=2, n_samples=8)
+        return drv.w.copy(), sim.plane.values.copy()
+
+    (w1, v1), (w2, v2) = run(), run()
+    assert np.array_equal(w1, w2)
+    assert np.array_equal(v1, v2)
+
+
+def test_simulator_default_uses_plane_and_legacy_signal_fn_still_works():
+    from repro.core.signals import constant
+
+    sim = FleetSimulator(SimConfig(n_clients=4, seed=0))
+    assert sim.plane is not None and sim.pool.plane is sim.plane
+    legacy = FleetSimulator(
+        SimConfig(n_clients=4, seed=0),
+        signal_fn=lambda i: {"Vehicle.RoadGrade": constant(0.5)},
+    )
+    assert legacy.plane is None
+    legacy.tick()  # the per-vehicle iterator path still ticks fine
+    v = next(iter(legacy.pool.vehicles.values()))
+    assert SignalHandler(v.signals).get("Vehicle.RoadGrade") == 0.5
