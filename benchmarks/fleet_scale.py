@@ -1,7 +1,8 @@
 """Fleet-scale benchmark: vectorized delta aggregation, the columnar
-signal plane, and simulator throughput.
+signal plane, the event-driven service scheduler, plane growth, and
+simulator throughput.
 
-Three sections, CSV rows like the rest of the harness:
+Five sections, CSV rows like the rest of the harness:
 
 * ``fleet/agg_*`` — FedAvg server-step latency over N packed int8 deltas,
   per-client reference loop (`aggregate_reference`) vs the batched
@@ -12,10 +13,25 @@ Three sections, CSV rows like the rest of the harness:
   iterators + subscriber callbacks) vs ONE `FleetSignalPlane.step` (a
   single jit'd drive-cycle evaluation for the whole fleet) at N=1024.
   The plane must win at the largest N (CI guard; >= 2x in full mode).
+* ``fleet/service_*`` — mostly-idle fleet tick: the dense O(N) poll loop
+  (`DensePollService`, the parity oracle) vs the event-driven
+  `FleetServiceScheduler` (wake hooks + vectorized phase gating,
+  O(runnable) per tick) at N=1024. The scheduler must win at the largest
+  N (CI guard; >= 3x in full mode) while producing identical broker
+  counters.
+* ``fleet/grow_*`` — mass admission: N `FleetSignalPlane.add_client`
+  joins with exact per-join regrowth (the pre-amortization path: one XLA
+  recompile + full history-ring realloc per join) vs geometric capacity
+  doubling (O(log N) regrows). Geometric must win (CI guard; >= 3x in
+  full mode).
 * ``fleet/sim_*`` — end-to-end discrete-event simulation: >= 1000 clients,
   >= 5 FedAvg rounds under a seeded lossy-broker schedule with stragglers,
   reporting clients/sec. In full (non ``--fast``) mode the run is repeated
   with the same seed and the final aggregates must match bit-for-bit.
+
+Guarded timings are **best-of-k** (k >= 3): minima are far more stable
+than medians on contended shared CI runners, so the guards catch code
+regressions, not scheduler noise.
 
 Run: ``PYTHONPATH=src python -m benchmarks.fleet_scale [--fast]``
 (exits non-zero if a vectorized path loses to its per-client loop).
@@ -39,6 +55,18 @@ TARGET_SPEEDUP_AT_MAX = 5.0
 PLANE_TARGET_SPEEDUP = 2.0
 PLANE_SIZES_FAST = (256,)
 PLANE_SIZES = (256, 1024)
+#: acceptance floor for the event-driven scheduler vs the dense poll loop
+#: on a mostly-idle fleet tick (the ISSUE-4 tentpole claim)
+SERVICE_TARGET_SPEEDUP = 3.0
+SERVICE_N_FAST, SERVICE_N = 256, 1024
+#: mostly-idle: only ~N/SERVICE_RESYNC clients dial in per tick
+SERVICE_RESYNC = 64
+#: acceptance floor for geometric plane growth vs exact per-join regrowth
+GROW_TARGET_SPEEDUP = 3.0
+#: every exact-path join is an XLA recompile (~0.5s), so joins drive this
+#: section's wall time; 12 fast joins (12 vs 2 recompiles) already shows
+#: the O(N)-vs-O(log N) gap without burning half a minute of CI smoke
+GROW_JOINS_FAST, GROW_JOINS = 12, 32
 
 
 def _synthetic_msgs(n: int, seed: int = 0) -> list[dict]:
@@ -52,26 +80,31 @@ def _synthetic_msgs(n: int, seed: int = 0) -> list[dict]:
 
 
 def _time(fn, reps: int) -> float:
+    """Best-of-k timing (k = reps, always >= 3): the minimum is the least
+    contention-polluted sample, so guard comparisons don't flake when a
+    shared runner throttles mid-measurement."""
     samples = []
-    for _ in range(reps):
+    for _ in range(max(3, reps)):
         t0 = time.perf_counter()
         fn()
         samples.append(time.perf_counter() - t0)
-    return float(np.median(samples)) * 1e6  # us
+    return float(np.min(samples)) * 1e6  # us
 
 
 def _time_pair(fn_a, fn_b, reps: int) -> tuple[float, float]:
-    """Interleaved median timing: alternating samples decorrelate the two
-    measurements from CPU-contention drift (shared CI runners)."""
+    """Interleaved best-of-k timing: alternating samples decorrelate the
+    two measurements from CPU-contention drift, and taking each side's
+    minimum (not median) keeps the guarded ratio stable on noisy shared
+    CI runners."""
     a, b = [], []
-    for _ in range(reps):
+    for _ in range(max(3, reps)):
         t0 = time.perf_counter()
         fn_a()
         a.append(time.perf_counter() - t0)
         t0 = time.perf_counter()
         fn_b()
         b.append(time.perf_counter() - t0)
-    return float(np.median(a)) * 1e6, float(np.median(b)) * 1e6
+    return float(np.min(a)) * 1e6, float(np.min(b)) * 1e6
 
 
 def aggregation_rows(fast: bool) -> tuple[list[tuple[str, float, str]], dict[int, float]]:
@@ -184,6 +217,95 @@ def signal_plane_rows(
     return rows, speedups
 
 
+def service_rows(
+    fast: bool,
+) -> tuple[list[tuple[str, float, str]], dict[int, float]]:
+    """Mostly-idle fleet tick cost, both service generations on identical
+    worlds: the dense O(N) poll loop (an `idle` check + `advance` per
+    online vehicle per tick) vs the event-driven scheduler (wake hooks +
+    vectorized phase masks, touching only runnable/resync-due clients).
+    The two sims run interleaved over the same tick sequence and must end
+    with identical broker counters — the parity contract, sampled."""
+    from repro.fleet import FleetSimulator, SimConfig
+
+    n = SERVICE_N_FAST if fast else SERVICE_N
+    reps = 20 if fast else 40
+    mk = lambda kind: FleetSimulator(
+        SimConfig(
+            n_clients=n, seed=3, resync_period=SERVICE_RESYNC, service=kind
+        )
+    )
+    dense, sched = mk("dense"), mk("scheduler")
+    t_dense, t_sched = _time_pair(dense.tick, sched.tick, reps)
+    assert dense.t == sched.t and (
+        dense.broker.published,
+        dense.broker.delivered,
+        dense.broker.dropped,
+    ) == (
+        sched.broker.published,
+        sched.broker.delivered,
+        sched.broker.dropped,
+    ), "scheduler diverged from the dense oracle"
+    speedups = {n: t_dense / t_sched}
+    return [
+        (
+            f"fleet/service_dense_N{n}",
+            t_dense,
+            f"O(N) poll loop, {n} online mostly-idle clients/tick",
+        ),
+        (
+            f"fleet/service_sched_N{n}",
+            t_sched,
+            f"{speedups[n]:.1f}x vs dense poll; "
+            f"{sched.service.last_serviced} of {n} clients touched",
+        ),
+    ], speedups
+
+
+def plane_growth_rows(
+    fast: bool,
+) -> tuple[list[tuple[str, float, str]], dict[int, float]]:
+    """Mass-admission cost: N `add_client` joins on a jit drive-cycle
+    plane. `growth=1.0` is the pre-amortization path — every join rebuilds
+    the series (an XLA recompile of the scenario step) and reallocates the
+    whole history ring; `growth=2.0` doubles capacity so both costs are
+    paid O(log N) times."""
+    from repro.core.signals import FleetSignalPlane
+    from repro.fleet.scenarios import SIGNALS, Scenario
+
+    joins = GROW_JOINS_FAST if fast else GROW_JOINS
+    reps = 3  # each rep recompiles; best-of-3 still bounds the noise
+    scen = Scenario("mixed", seed=5)
+
+    def admit(growth: float) -> None:
+        plane = FleetSignalPlane(
+            SIGNALS, scen.series(8), history=64,
+            grow_fn=scen.series, growth=growth,
+        )
+        plane.step()
+        for _ in range(joins):
+            plane.add_client()
+
+    admit(2.0)  # warm-up: jax dispatch machinery, first-compile overheads
+    t_exact, t_geo = _time_pair(
+        lambda: admit(1.0), lambda: admit(2.0), reps
+    )
+    speedups = {joins: t_exact / t_geo}
+    return [
+        (
+            f"fleet/grow_exact_J{joins}",
+            t_exact,
+            f"{joins} joins, regrow+recompile per join",
+        ),
+        (
+            f"fleet/grow_geometric_J{joins}",
+            t_geo,
+            f"{speedups[joins]:.1f}x vs exact regrowth "
+            f"(capacity doubling, O(log N) recompiles)",
+        ),
+    ], speedups
+
+
 def simulator_rows(fast: bool) -> list[tuple[str, float, str]]:
     from repro.fleet import FedConfig, FleetSimulator, SimConfig
 
@@ -239,13 +361,23 @@ def rows(
     fast: bool,
 ) -> tuple[list[tuple[str, float, str]], dict[str, dict[int, float]]]:
     """All fleet rows plus the vectorization speedups (for the CI guard),
-    keyed by section: ``{"agg": {N: x}, "plane": {N: x}}``."""
+    keyed by section: ``{"agg": {N: x}, "plane": {N: x}, "service":
+    {N: x}, "grow": {joins: x}}``."""
     agg, agg_speedups = _measure_guarded(aggregation_rows, _agg_guard, fast)
     plane, plane_speedups = _measure_guarded(
         signal_plane_rows, _plane_guard, fast
     )
-    guards = {"agg": agg_speedups, "plane": plane_speedups}
-    return agg + plane + simulator_rows(fast), guards
+    service, service_speedups = _measure_guarded(
+        service_rows, _service_guard, fast
+    )
+    grow, grow_speedups = _measure_guarded(plane_growth_rows, _grow_guard, fast)
+    guards = {
+        "agg": agg_speedups,
+        "plane": plane_speedups,
+        "service": service_speedups,
+        "grow": grow_speedups,
+    }
+    return agg + plane + service + grow + simulator_rows(fast), guards
 
 
 def _agg_guard(speedups: dict[int, float], *, fast: bool) -> str | None:
@@ -281,14 +413,55 @@ def _plane_guard(speedups: dict[int, float], *, fast: bool) -> str | None:
     return None
 
 
+def _service_guard(speedups: dict[int, float], *, fast: bool) -> str | None:
+    n_max = max(speedups)
+    if speedups[n_max] < 1.0:
+        return (
+            f"event-driven scheduler slower than dense poll loop at "
+            f"N={n_max}: {speedups[n_max]:.2f}x"
+        )
+    if not fast and speedups[n_max] < SERVICE_TARGET_SPEEDUP:
+        return (
+            f"scheduler speedup on a mostly-idle fleet tick at N={n_max} "
+            f"is {speedups[n_max]:.1f}x < {SERVICE_TARGET_SPEEDUP:.0f}x target"
+        )
+    return None
+
+
+def _grow_guard(speedups: dict[int, float], *, fast: bool) -> str | None:
+    j_max = max(speedups)
+    if speedups[j_max] < 1.0:
+        return (
+            f"geometric plane growth slower than exact regrowth over "
+            f"{j_max} joins: {speedups[j_max]:.2f}x"
+        )
+    if not fast and speedups[j_max] < GROW_TARGET_SPEEDUP:
+        return (
+            f"geometric plane-growth speedup over {j_max} joins is "
+            f"{speedups[j_max]:.1f}x < {GROW_TARGET_SPEEDUP:.0f}x target"
+        )
+    return None
+
+
+_GUARDS = {
+    "agg": _agg_guard,
+    "plane": _plane_guard,
+    "service": _service_guard,
+    "grow": _grow_guard,
+}
+
+
 def check_guard(
     speedups: dict[str, dict[int, float]], *, fast: bool
 ) -> str | None:
-    """Returns an error string if any vectorized path regressed against
-    its per-client Python baseline."""
-    return _agg_guard(speedups["agg"], fast=fast) or _plane_guard(
-        speedups["plane"], fast=fast
-    )
+    """Returns an error string if any vectorized/event-driven path
+    regressed against its per-client Python baseline."""
+    for section, guard in _GUARDS.items():
+        if section in speedups:
+            err = guard(speedups[section], fast=fast)
+            if err:
+                return err
+    return None
 
 
 def main() -> None:

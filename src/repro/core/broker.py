@@ -115,18 +115,33 @@ def seeded_fault_plan(
 
 class Subscription:
     """A per-subscriber FIFO queue. `poll()` is non-blocking (the simulated
-    clients run event loops, not threads); `drain()` yields all pending."""
+    clients run event loops, not threads); `drain()` yields all pending.
+
+    `wake` is the delivery hook event-driven schedulers rely on: when set,
+    it is invoked (outside the queue lock) after every `_offer`, so a
+    subscriber becomes runnable the moment a message lands instead of
+    being polled every tick."""
 
     def __init__(self, pattern: str, qos: int, order: int = 0):
         self.pattern = pattern
         self.qos = qos
         self.order = order  # broker-wide subscription sequence number
+        self.wake: Callable[[], None] | None = None
         self._queue: deque[Message] = deque()
         self._lock = threading.Lock()
 
     def _offer(self, msg: Message) -> None:
         with self._lock:
             self._queue.append(msg)
+        cb = self.wake
+        if cb is not None:
+            cb()
+
+    @property
+    def has_pending(self) -> bool:
+        """Lock-free pending check (GIL-atomic deque truthiness) — the O(1)
+        read `EdgeClient.has_work` does per serviced client, not per tick."""
+        return bool(self._queue)
 
     def poll(self) -> Message | None:
         with self._lock:

@@ -25,8 +25,7 @@ threads for long-running/interactive use.
 """
 from __future__ import annotations
 
-import queue
-import threading
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -101,8 +100,15 @@ class EdgeClient:
 
         # --- plumbing --------------------------------------------------#
         self._ops: list[tuple] = []  # pending spawned operations (FIFO)
-        self._container_events: "queue.Queue[tuple]" = queue.Queue()
+        # deque, not queue.Queue: GIL-atomic append/popleft without a lock
+        # acquisition per poll — the fleet scheduler reads `has_work` on
+        # every serviced client and the old Queue.empty() mutex dominated
+        # idle-fleet ticks.
+        self._container_events: deque[tuple] = deque()
         self._sub: Subscription | None = None
+        #: scheduler wake hook — called whenever new work arrives (an op is
+        #: spawned, a broker notification lands, a container emits)
+        self._wake_cb: Callable[[], None] | None = None
         self.rpc_failures = 0
 
     # ------------------------------------------------------------------ #
@@ -120,6 +126,8 @@ class EdgeClient:
         except NetworkError:
             self.rpc_failures += 1
         self._sub = self.broker.subscribe(client_clock_topic(self.client_id), qos=0)
+        if self._wake_cb is not None:
+            self._sub.wake = self._wake_cb
         self.syncing_state = True
         if any(self.disk.unacked.values()) or self.disk.terminal:
             # restart with pending uploads: go straight to submit
@@ -159,11 +167,8 @@ class EdgeClient:
             for msg in self._sub.drain():
                 self._on_clock(int(msg.value))
                 n += 1
-        while True:
-            try:
-                ev = self._container_events.get_nowait()
-            except queue.Empty:
-                break
+        while self._container_events:
+            ev = self._container_events.popleft()
             self._on_container_event(*ev)
             n += 1
         return n
@@ -211,15 +216,43 @@ class EdgeClient:
         raise RuntimeError("sync loop did not quiesce")
 
     @property
-    def idle(self) -> bool:
-        return (
-            not self._ops
-            and (self._sub is None or len(self._sub) == 0)
-            and self._container_events.empty()
+    def has_work(self) -> bool:
+        """O(1), lock-free: pending ops, undrained broker notifications, or
+        container events. This is what an event-driven scheduler checks
+        after servicing a client (and *only* then — arrival is signalled
+        through the wake hook, not by polling this per tick)."""
+        return bool(
+            self._ops
+            or (self._sub is not None and self._sub.has_pending)
+            or self._container_events
         )
+
+    @property
+    def idle(self) -> bool:
+        return not self.has_work
+
+    def set_wake(self, cb: Callable[[], None] | None) -> None:
+        """Install (or clear) the scheduler wake hook: `cb` fires whenever
+        work arrives — a spawned op, a broker delivery to the clock topic,
+        or a container result/status event. Spurious wakes are allowed
+        (the scheduler re-checks `has_work`); missed wakes are not."""
+        self._wake_cb = cb
+        if self._sub is not None:
+            self._sub.wake = cb
 
     def _spawn(self, op: tuple) -> None:
         self._ops.append(op)
+        cb = self._wake_cb
+        if cb is not None:
+            cb()
+
+    def _emit_container_event(self, ev: tuple) -> None:
+        """Container -> sync-loop event enqueue (possibly from a container
+        thread); wakes the scheduler so the event gets serviced."""
+        self._container_events.append(ev)
+        cb = self._wake_cb
+        if cb is not None:
+            cb()
 
     # ------------------------------------------------------------------ #
     # Algorithm 1 cases                                                  #
@@ -399,7 +432,7 @@ class EdgeClient:
             return self.signal_handler.window(name, k)
 
         def publish(value: Any) -> None:
-            self._container_events.put((task_id, value, None, ""))
+            self._emit_container_event((task_id, value, None, ""))
 
         return PayloadContext(
             get_signal=get_signal,
@@ -431,7 +464,7 @@ class EdgeClient:
                 # ACTIVE; nothing to upload.
                 return
             status = TaskStatus.FINISHED if exit.ok else TaskStatus.ERROR
-            self._container_events.put(
+            self._emit_container_event(
                 (lt.task_id, None, status, exit.log if not exit.ok else "")
             )
 

@@ -190,6 +190,21 @@ class FleetSignalPlane:
     NaN is the "no observation yet" marker: `read` maps it to ``None``
     (exactly what `SignalHandler.get` returns before a push broker's first
     callback).
+
+    Growth is amortized: rows are overallocated geometrically (capacity
+    doubling, controlled by ``growth``), so mass admission of N vehicles
+    rebuilds the series (an XLA recompile for jit scenarios) and
+    reallocates the history ring only O(log N) times, not N times. The
+    generators are row-stable, so computing the spare capacity rows is
+    harmless; ``values`` always exposes exactly the `n_clients` live rows.
+
+    Offline semantics: plane *time* is fleet-global (every row's current
+    value advances each `step`), but the history ring NaN-masks rows whose
+    vehicle is powered off (`set_online`), so
+    ``autospada.get_signal_window`` after re-ignition only contains values
+    observed while the ignition was on — matching the scripted path, where
+    a powered-off vehicle's iterators pause. The `values` matrix itself is
+    untouched by masking.
     """
 
     def __init__(
@@ -199,27 +214,37 @@ class FleetSignalPlane:
         *,
         history: int = 256,
         grow_fn: Callable[[int], Callable[[int], np.ndarray]] | None = None,
+        growth: float = 2.0,
     ):
         self.names: tuple[str, ...] = tuple(names)
         self._col = {n: j for j, n in enumerate(self.names)}
         self._series_fn = series_fn
         self._grow_fn = grow_fn
+        self._growth = max(1.0, float(growth))
         self.t = 0
-        self.values = np.array(series_fn(0), np.float32, copy=True)
-        if self.values.ndim != 2 or self.values.shape[1] != len(self.names):
+        self._values = np.array(series_fn(0), np.float32, copy=True)
+        if self._values.ndim != 2 or self._values.shape[1] != len(self.names):
             raise ValueError(
                 f"series_fn must return (n_clients, {len(self.names)}), "
-                f"got {self.values.shape}"
+                f"got {self._values.shape}"
             )
-        self.n_clients = self.values.shape[0]
+        self.n_clients = self._values.shape[0]
+        self._capacity = self._values.shape[0]
+        self._offline = np.zeros(self._capacity, bool)
         self._hist_cap = max(1, int(history))
         self._hist = np.full(
-            (self._hist_cap, self.n_clients, len(self.names)),
+            (self._hist_cap, self._capacity, len(self.names)),
             np.nan,
             np.float32,
         )
-        self._hist[0] = self.values
+        self._hist[0] = self._values
         self._hist_len = 1
+
+    @property
+    def values(self) -> np.ndarray:
+        """The live fleet's `(n_clients, n_signals)` latest values (a view
+        into the capacity-sized backing array)."""
+        return self._values[: self.n_clients]
 
     # -- construction adapters ----------------------------------------- #
     @classmethod
@@ -276,24 +301,48 @@ class FleetSignalPlane:
     # -- the hot path --------------------------------------------------- #
     def step(self) -> None:
         """Advance every vehicle's every signal: one series_fn call, one
-        ring write. This is the whole fleet's per-tick signal cost."""
+        ring write. This is the whole fleet's per-tick signal cost.
+        Offline rows are NaN-masked in the ring (not in `values`): a
+        powered-off vehicle observes nothing while the ignition is off."""
         self.t += 1
-        self.values = np.asarray(self._series_fn(self.t), np.float32)
-        self._hist[self.t % self._hist_cap] = self.values
+        self._values = np.asarray(self._series_fn(self.t), np.float32)
+        slot = self.t % self._hist_cap
+        self._hist[slot] = self._values
+        if self._offline.any():
+            self._hist[slot, self._offline] = np.nan
         self._hist_len = min(self._hist_len + 1, self._hist_cap)
+
+    def _check_row(self, row: int) -> int:
+        """Spare capacity rows hold real scenario values (step computes the
+        whole backing array), so an out-of-range row must fail fast rather
+        than silently return a phantom vehicle's signals."""
+        row = int(row)
+        if not 0 <= row < self.n_clients:
+            raise IndexError(
+                f"row {row} out of range for a {self.n_clients}-vehicle plane"
+            )
+        return row
+
+    def set_online(self, row: int, online: bool) -> None:
+        """Ignition state for history-ring masking. While a row is offline
+        its ring entries are NaN ("nothing observed"); the latest-value
+        matrix keeps advancing because plane time is fleet-global."""
+        self._offline[self._check_row(row)] = not online
 
     # -- per-vehicle reads ---------------------------------------------- #
     def read(self, row: int, name: str) -> float | None:
+        row = self._check_row(row)
         j = self._col.get(name)
         if j is None:
             return None
-        v = float(self.values[row, j])
+        v = float(self._values[row, j])
         return None if math.isnan(v) else v
 
     def window(self, row: int, name: str, k: int) -> list[float]:
         """Last `k` observed values for one vehicle's signal, oldest
         first (at most `history`; NaN "not yet observed" entries are
         skipped, mirroring a push subscriber that saw no callback)."""
+        row = self._check_row(row)
         j = self._col.get(name)
         if j is None:
             return []
@@ -304,29 +353,54 @@ class FleetSignalPlane:
         return [float(v) for v in vals if not math.isnan(v)]
 
     def view(self, row: int) -> "PlaneSignalView":
-        return PlaneSignalView(self, row)
+        return PlaneSignalView(self, self._check_row(row))
 
     # -- fleet growth ---------------------------------------------------- #
-    def add_client(self) -> int:
-        """A new vehicle joins: regrow the series to n+1 rows (scenario
-        generators are row-stable: existing vehicles' streams are
-        unchanged). Returns the new row index."""
+    def _ensure_capacity(self, n: int) -> None:
+        """Grow the backing arrays to hold >= n rows, geometrically: the
+        series rebuild (and its XLA recompile, for jit scenarios) and the
+        history-ring reallocation happen O(log n) times across n joins."""
+        if n <= self._capacity:
+            return
         if self._grow_fn is None:
             raise ValueError(
                 "this plane has a fixed fleet size (no grow_fn); "
                 "construct it via a scenario to support add_client"
             )
-        n_new = self.n_clients + 1
-        self._series_fn = self._grow_fn(n_new)
-        self.values = np.array(self._series_fn(self.t), np.float32, copy=True)
+        cap = max(n, int(math.ceil(self._capacity * self._growth)))
+        self._series_fn = self._grow_fn(cap)
+        # row-stable generators: rows < n_clients come back unchanged
+        self._values = np.array(self._series_fn(self.t), np.float32, copy=True)
         hist = np.full(
-            (self._hist_cap, n_new, len(self.names)), np.nan, np.float32
+            (self._hist_cap, cap, len(self.names)), np.nan, np.float32
         )
-        hist[:, : self.n_clients, :] = self._hist
-        hist[self.t % self._hist_cap] = self.values
+        hist[:, : self._capacity, :] = self._hist
         self._hist = hist
-        self.n_clients = n_new
-        return n_new - 1
+        offline = np.zeros(cap, bool)
+        offline[: self._capacity] = self._offline
+        self._offline = offline
+        self._capacity = cap
+
+    def add_client(self) -> int:
+        """A new vehicle joins. Amortized O(1): within spare capacity only
+        the new row's ring history is initialized (NaN except the current
+        tick — a join must not expose values 'observed' before it existed);
+        past capacity the arrays double (`_ensure_capacity` raises for
+        fixed-size planes). Returns the new row index."""
+        i = self.n_clients
+        self._ensure_capacity(i + 1)
+        self.n_clients = i + 1
+        self._hist[:, i, :] = np.nan
+        self._hist[self.t % self._hist_cap, i, :] = self._values[i]
+        self._offline[i] = False
+        return i
+
+    def add_clients(self, k: int) -> list[int]:
+        """Mass admission: reserve capacity once, then O(1) per join."""
+        if k <= 0:
+            return []
+        self._ensure_capacity(self.n_clients + k)
+        return [self.add_client() for _ in range(k)]
 
 
 class PlaneSignalView(SignalBroker):

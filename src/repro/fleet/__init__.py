@@ -16,18 +16,25 @@ from repro.fleet.rounds import (
     FederatedDriver,
     aggregate_packed,
     aggregate_reference,
+    mean_reported_loss,
     pump_until_deadline,
     stack_deltas,
 )
 from repro.fleet.scenarios import SCENARIOS, SIGNALS, Scenario, build_plane
+from repro.fleet.service import (
+    DensePollService,
+    FleetServiceScheduler,
+    make_service,
+)
 from repro.fleet.simulator import FleetSimulator, SimConfig
 
 __all__ = [
-    "AnalyticsConfig", "AnalyticsDriver", "ErrorFeedback", "FedConfig",
-    "FederatedDriver", "FleetMetrics", "FleetPool", "FleetSimulator",
-    "RoundMetrics", "SCENARIOS", "SIGNALS", "Scenario", "SimConfig",
-    "WindowStats", "aggregate_deltas", "aggregate_packed",
-    "aggregate_reference", "batched_dequant_mean", "build_plane",
-    "client_delta", "local_sgd", "make_codec", "merge_moments_reference",
-    "pump_until_deadline", "stack_deltas",
+    "AnalyticsConfig", "AnalyticsDriver", "DensePollService",
+    "ErrorFeedback", "FedConfig", "FederatedDriver", "FleetMetrics",
+    "FleetPool", "FleetServiceScheduler", "FleetSimulator", "RoundMetrics",
+    "SCENARIOS", "SIGNALS", "Scenario", "SimConfig", "WindowStats",
+    "aggregate_deltas", "aggregate_packed", "aggregate_reference",
+    "batched_dequant_mean", "build_plane", "client_delta", "local_sgd",
+    "make_codec", "make_service", "mean_reported_loss",
+    "merge_moments_reference", "pump_until_deadline", "stack_deltas",
 ]

@@ -62,10 +62,21 @@ class FleetPool:
         self.rng = np.random.default_rng(seed)
         self._signal_fn = signal_fn
         self.plane = plane
+        #: attached fleet service (repro.fleet.service) notified on power
+        #: transitions so wake hooks follow the live EdgeClient instance
+        self._service = None
         self._next_index = 0
         self.vehicles: dict[str, Vehicle] = {}
+        if plane is not None and n_vehicles > plane.n_clients:
+            # mass admission: reserve plane capacity once up front
+            plane.add_clients(n_vehicles - plane.n_clients)
         for _ in range(n_vehicles):
             self.add_vehicle()
+
+    def attach_service(self, service) -> None:
+        """Register a fleet service (scheduler or dense oracle) to receive
+        power-transition hooks for wake re-wiring."""
+        self._service = service
 
     # -- fleet membership ----------------------------------------------- #
     def _make_vehicle(self, i: int) -> Vehicle:
@@ -110,6 +121,12 @@ class FleetPool:
         )
         v.client.bootstrap()
         self.store.set_online(cid, True)
+        i = v.metadata["index"]
+        if self.plane is not None:
+            # history-ring masking resumes recording from this tick on
+            self.plane.set_online(i, True)
+        if self._service is not None:
+            self._service.client_powered_on(i, v.client)
 
     def power_off(self, cid: str) -> None:
         """Ignition off mid-anything: volatile state is lost, disk survives."""
@@ -119,6 +136,13 @@ class FleetPool:
         v.client.shutdown()
         v.client = None
         self.store.set_online(cid, False)
+        i = v.metadata["index"]
+        if self.plane is not None:
+            # plane time keeps running fleet-globally, but nothing is
+            # "observed" by a powered-off vehicle: NaN-mask its ring rows
+            self.plane.set_online(i, False)
+        if self._service is not None:
+            self._service.client_powered_off(i)
 
     def online(self) -> list[str]:
         return [cid for cid, v in self.vehicles.items() if v.client is not None]

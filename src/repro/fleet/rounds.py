@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import base64
 import json
+import math
 from typing import Any, Callable
 
 import jax
@@ -180,6 +181,25 @@ autospada.publish({
 """
 
 
+def mean_reported_loss(msgs: list[dict[str, Any]]) -> float | None:
+    """Fleet-mean of the client-reported training losses.
+
+    A client may legitimately publish a result without a ``loss`` (legacy
+    payloads, custom uploads) or with a non-finite one; those must not
+    poison the round metric — ``mean(.., nan)`` turned the whole metrics
+    table NaN. Missing/non-finite entries are filtered; None when no
+    client reported a usable loss."""
+    losses = []
+    for m in msgs:
+        try:
+            loss = float(m["loss"])
+        except (KeyError, TypeError, ValueError):
+            continue
+        if math.isfinite(loss):
+            losses.append(loss)
+    return float(np.mean(losses)) if losses else None
+
+
 class FederatedDriver:
     """Runs FedAvg rounds through the platform."""
 
@@ -193,9 +213,12 @@ class FederatedDriver:
         bias_signal: str = "Vehicle.RoadGrade",
         n_samples: int = 64,
         n_samples_fn: Callable[[int], int] | None = None,
+        payload_source: str | None = None,
     ):
         self.user = user
         self.cfg = cfg
+        #: task container source; override to exercise bespoke uploads
+        self.payload_source = payload_source or ROUND_PAYLOAD
         self.w = np.zeros((dim,), np.float32)
         self.w_true = w_true
         self.bias_signal = bias_signal
@@ -211,7 +234,7 @@ class FederatedDriver:
 
     def run_round(self, rnd: int, pump: Callable[[], None]) -> dict[str, Any]:
         clients = self.user.online_clients()
-        payload = self.user.payload(ROUND_PAYLOAD, name=f"fedavg-r{rnd}")
+        payload = self.user.payload(self.payload_source, name=f"fedavg-r{rnd}")
         tasks = []
         for i, c in enumerate(clients):
             ns = self.n_samples_fn(i) if self.n_samples_fn else self.n_samples
@@ -240,12 +263,11 @@ class FederatedDriver:
         )
         # deadline reached: cancel stragglers (paper lifecycle semantics)
         canceled = assign.cancel()
-        msgs, losses = [], []
+        msgs = []
         for task_id, values in assign.results().items():
             for v in values:
                 if isinstance(v, dict) and v.get("round") == rnd and "q" in v:
                     msgs.append(v)
-                    losses.append(v.get("loss", float("nan")))
         self.last_msgs = msgs
         weights = None
         if msgs:
@@ -264,7 +286,7 @@ class FederatedDriver:
             "canceled": canceled,
             "pumps": pumps,
             "weights": None if weights is None else [float(v) for v in weights],
-            "mean_client_loss": float(np.mean(losses)) if losses else None,
+            "mean_client_loss": mean_reported_loss(msgs),
             "dist_to_optimum": float(np.linalg.norm(self.w - self.w_true)),
         }
         self.history.append(rec)

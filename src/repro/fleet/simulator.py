@@ -19,11 +19,15 @@ Time is an integer tick. One `tick()`:
 3. advances the fleet's signals — ONE columnar `FleetSignalPlane` step
    (a jit'd drive-cycle scenario from `repro.fleet.scenarios`) instead of
    the old O(n_clients × n_signals) per-vehicle iterator loop;
-4. gives every online client a bounded amount of sync-loop work
-   (`EdgeClient.advance(steps_per_tick)`), staggered so stragglers run at
-   a fraction of the fleet rate; idle clients periodically dial in
-   (`resync`) — the paper's recovery story for dropped QoS-0
-   notifications.
+4. services the fleet's sync loops through the configured fleet service
+   (`repro.fleet.service`): the event-driven `FleetServiceScheduler` by
+   default — wake hooks make clients runnable, vectorized phase masks
+   gate stragglers/resyncs, and only runnable clients are touched — or
+   the original `DensePollService` O(N) loop (`SimConfig.service =
+   "dense"`), kept as the bit-for-bit parity oracle. Stragglers get a
+   sync-loop budget only every `straggler_period`-th tick; idle clients
+   periodically dial in (`resync`) — the paper's recovery story for
+   dropped QoS-0 notifications.
 
 Everything observable is a deterministic function of `SimConfig`
 (including the seed): same config => same event interleaving => same
@@ -48,6 +52,7 @@ from repro.fleet.federated import FedConfig
 from repro.fleet.metrics import FleetMetrics, RoundMetrics
 from repro.fleet.rounds import FederatedDriver
 from repro.fleet.scenarios import build_plane
+from repro.fleet.service import make_service
 
 
 @dataclass(frozen=True)
@@ -77,6 +82,10 @@ class SimConfig:
     # -- service rates -------------------------------------------------- #
     steps_per_tick: int = 8    # sync-loop op budget per client per tick
     resync_period: int = 4     # idle clients dial in every k ticks
+    #: fleet service implementation: "scheduler" (event-driven runnable
+    #: set, O(runnable) per tick) or "dense" (the original O(N) poll loop,
+    #: kept as the parity oracle — both yield identical interleavings)
+    service: str = "scheduler"
 
 
 class FleetSimulator:
@@ -134,16 +143,23 @@ class FleetSimulator:
         )
         k = int(round(cfg.n_clients * cfg.straggler_fraction))
         slow = set(int(i) for i in order[:k])
-        self._stragglers = {
-            cid
-            for cid, v in self.pool.vehicles.items()
-            if v.metadata["index"] in slow
-        }
         # let the initial bootstrap traffic settle so round 0 starts from
         # a quiesced fleet regardless of fleet size
         for v in self.pool.vehicles.values():
             if v.client is not None:
                 v.client.run_until_idle()
+        # fleet service: event-driven scheduler (default) or the dense
+        # poll-loop oracle — attached after the quiesce so the scheduler's
+        # runnable set starts from the fleet's true (idle) state
+        self.service = make_service(
+            cfg.service,
+            self.pool,
+            steps_per_tick=cfg.steps_per_tick,
+            resync_period=cfg.resync_period,
+            straggler_period=cfg.straggler_period,
+            straggler_indices=slow,
+        )
+        self.pool.attach_service(self.service)
 
     # ------------------------------------------------------------------ #
     # the discrete-event loop                                            #
@@ -167,17 +183,9 @@ class FleetSimulator:
         #    Scripted signals keep the historical behaviour: a powered-off
         #    vehicle's iterators pause until the ignition returns.
         self.pool.tick_signals(online_only=True)
-        # 4. bounded sync-loop service per online client
-        for i, (cid, v) in enumerate(self.pool.vehicles.items()):
-            c = v.client
-            if c is None:
-                continue
-            if cid in self._stragglers and (self.t + i) % cfg.straggler_period:
-                continue  # straggler: skips this tick's service slot
-            if c.idle and (self.t + i) % cfg.resync_period == 0:
-                # periodic dial-in recovers dropped QoS-0 notifications
-                c.resync()
-            c.advance(cfg.steps_per_tick)
+        # 4. bounded sync-loop service: O(runnable) via the event-driven
+        #    scheduler (or the dense O(N) oracle — identical interleaving)
+        self.service.tick(self.t)
 
     # `pump` alias: FederatedDriver and AssignmentDoc.await_results take a
     # zero-arg world-advancer

@@ -49,6 +49,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="per-tick ignition-on prob")
     ap.add_argument("--stragglers", type=float, default=0.0,
                     help="fraction of slow clients")
+    ap.add_argument("--service", choices=("scheduler", "dense"),
+                    default="scheduler",
+                    help="fleet service: event-driven scheduler "
+                         "(O(runnable)/tick) or the dense poll-loop "
+                         "oracle (O(N)/tick, identical interleaving)")
     ap.add_argument("--deadline", type=float, default=0.9,
                     help="fraction of clients awaited per round")
     ap.add_argument("--deadline-pumps", type=int, default=64,
@@ -81,6 +86,7 @@ def main() -> None:
             p_leave=args.leave,
             p_return=args.p_return,
             straggler_fraction=args.stragglers,
+            service=args.service,
         )
     )
     if args.workload == "analytics":

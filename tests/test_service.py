@@ -1,0 +1,267 @@
+"""Event-driven fleet service scheduler: bit-for-bit parity with the
+dense poll-loop oracle under faults + churn + stragglers, O(runnable)
+idle behaviour, wake plumbing across power cycles and joins, and the
+round-metrics loss bugfix."""
+import numpy as np
+import pytest
+
+from repro.fleet import (
+    DensePollService,
+    FedConfig,
+    FleetMetrics,
+    FleetServiceScheduler,
+    FleetSimulator,
+    RoundMetrics,
+    SimConfig,
+    mean_reported_loss,
+)
+from repro.fleet.rounds import FederatedDriver
+
+
+def _fingerprint(sim: FleetSimulator, driver) -> tuple:
+    """Everything the parity contract pins down: the aggregate, the broker
+    counters (same message-id sequence => same seeded fault schedule),
+    per-round participation, and consumed ticks."""
+    return (
+        driver.w.copy(),
+        (sim.broker.published, sim.broker.delivered, sim.broker.dropped),
+        [r["participants"] for r in driver.history],
+        [r["canceled"] for r in driver.history],
+        sim.t,
+    )
+
+
+def _run(mode: str, **overrides) -> tuple:
+    cfg = dict(
+        n_clients=48,
+        seed=17,
+        p_drop=0.15,
+        p_duplicate=0.05,
+        max_delay=2,
+        p_leave=0.02,
+        p_return=0.3,
+        straggler_fraction=0.25,
+        straggler_period=8,
+        service=mode,
+    )
+    cfg.update(overrides)
+    sim = FleetSimulator(SimConfig(**cfg))
+    driver = sim.run_federated(
+        FedConfig(
+            local_steps=2, local_lr=0.2, deadline_fraction=0.7,
+            deadline_pumps=48,
+        ),
+        dim=16,
+        rounds=3,
+        n_samples=8,
+    )
+    return _fingerprint(sim, driver)
+
+
+# --------------------------------------------------------------------- #
+# the tentpole contract: scheduler == dense oracle, bit for bit          #
+# --------------------------------------------------------------------- #
+def test_scheduler_matches_dense_oracle_bit_for_bit():
+    """Same SimConfig (faults + churn + stragglers) through the dense
+    poll-loop oracle and the event-driven scheduler must yield identical
+    aggregates AND identical broker counters — the strongest available
+    witness that the event interleaving (message-id sequence, hence the
+    seeded fault schedule) is reproduced exactly."""
+    w_d, counters_d, parts_d, canc_d, t_d = _run("dense")
+    w_s, counters_s, parts_s, canc_s, t_s = _run("scheduler")
+    assert np.array_equal(w_d, w_s)
+    assert counters_d == counters_s
+    assert parts_d == parts_s and canc_d == canc_s
+    assert t_d == t_s
+
+
+def test_scheduler_parity_on_clean_full_participation_run():
+    a = _run("dense", p_drop=0.0, p_duplicate=0.0, max_delay=0,
+             p_leave=0.0, p_return=0.0)
+    b = _run("scheduler", p_drop=0.0, p_duplicate=0.0, max_delay=0,
+             p_leave=0.0, p_return=0.0)
+    assert np.array_equal(a[0], b[0]) and a[1:] == b[1:]
+
+
+def test_scheduler_is_default_and_deterministic():
+    sim = FleetSimulator(SimConfig(n_clients=8, seed=0))
+    assert isinstance(sim.service, FleetServiceScheduler)
+    dense = FleetSimulator(SimConfig(n_clients=8, seed=0, service="dense"))
+    assert isinstance(dense.service, DensePollService)
+    a = _run("scheduler")
+    b = _run("scheduler")
+    assert np.array_equal(a[0], b[0]) and a[1:] == b[1:]
+
+
+def test_unknown_service_kind_raises():
+    with pytest.raises(ValueError, match="unknown service"):
+        FleetSimulator(SimConfig(n_clients=2, service="threads"))
+
+
+# --------------------------------------------------------------------- #
+# O(runnable): idle clients are not touched                              #
+# --------------------------------------------------------------------- #
+def test_idle_fleet_services_only_the_resync_due_phase_class():
+    """A quiesced 32-vehicle fleet with resync_period=8: each tick exactly
+    the 4 clients whose (t + i) phase matches dial in; the other 28 are
+    never polled (the dense loop advanced all 32 every tick)."""
+    sim = FleetSimulator(SimConfig(n_clients=32, seed=1, resync_period=8))
+    for _ in range(16):
+        sim.tick()
+        assert sim.service.last_serviced == 4
+    dense = FleetSimulator(
+        SimConfig(n_clients=32, seed=1, resync_period=8, service="dense")
+    )
+    dense.tick()
+    assert dense.service.last_serviced == 32
+
+
+def test_broker_delivery_wakes_exactly_the_target_client():
+    sim = FleetSimulator(SimConfig(n_clients=16, seed=2, resync_period=1024))
+    sim.tick()
+    assert sim.service.last_serviced <= 1  # mostly idle, huge resync period
+    payload = sim.user.payload("import autospada\nautospada.publish({'ok': 1})\n")
+    assign = sim.user.assignment(
+        "one-task", [sim.user.task("veh-003", payload)]
+    ).commit()
+    # commit published a clock bump to veh-003 only: the wake hook makes it
+    # runnable, the next ticks service it to completion without a fleet scan
+    for _ in range(8):
+        sim.tick()
+        assert sim.service.last_serviced <= 2
+    assert set(assign.statuses().values()) == {"FINISHED"}
+    assert assign.results()[assign.tasks[0].task_id] == [{"ok": 1}]
+
+
+def test_power_cycle_rewires_wake_hooks():
+    sim = FleetSimulator(SimConfig(n_clients=6, seed=4, resync_period=1024))
+    cid = "veh-002"
+    sim.pool.power_off(cid)
+    sim.tick()
+    sim.pool.power_on(cid)  # a NEW EdgeClient instance: hooks must follow
+    sim.pool.vehicles[cid].client.run_until_idle()
+    payload = sim.user.payload("import autospada\nautospada.publish({'v': 7})\n")
+    assign = sim.user.assignment(
+        "after-reboot", [sim.user.task(cid, payload)]
+    ).commit()
+    for _ in range(8):
+        sim.tick()
+    assert set(assign.statuses().values()) == {"FINISHED"}
+
+
+def test_new_vehicles_join_mid_experiment_under_the_scheduler():
+    sim = FleetSimulator(SimConfig(n_clients=8, seed=1))
+    driver = sim.run_federated(
+        FedConfig(local_steps=3, local_lr=0.2, deadline_fraction=1.0),
+        dim=16, rounds=1, n_samples=16,
+    )
+    for _ in range(4):  # scheduler arrays + plane capacity must both grow
+        cid = sim.pool.add_vehicle()
+        sim.pool.vehicles[cid].client.run_until_idle()
+    rec = driver.run_round(1, pump=sim.tick)
+    assert rec["participants"] == 12
+
+
+# --------------------------------------------------------------------- #
+# bugfix: a result without `loss` must not poison mean_client_loss       #
+# --------------------------------------------------------------------- #
+def test_mean_reported_loss_filters_missing_and_non_finite():
+    msgs = [
+        {"loss": 1.0},
+        {},  # legacy upload without a loss field
+        {"loss": float("nan")},
+        {"loss": None},
+        {"loss": "oops"},  # non-numeric: skipped, must not crash the round
+        {"loss": [1.0]},
+        {"loss": 3.0},
+    ]
+    assert mean_reported_loss(msgs) == pytest.approx(2.0)
+    assert mean_reported_loss([{}, {"loss": float("inf")}]) is None
+    assert mean_reported_loss([]) is None
+
+
+#: ROUND_PAYLOAD's upload shape, but only even-indexed clients report a
+#: loss (data_seed == 1000*round + client_index)
+_PARTIAL_LOSS_PAYLOAD = """
+import autospada, base64
+import numpy as np
+
+p = autospada.get_parameters()
+w = np.asarray(p["weights"], dtype=np.float32)
+delta = np.full_like(w, 0.01)
+row = 256
+n = delta.shape[0]
+pad = (-n) % row
+x = np.pad(delta, (0, pad)).reshape(-1, row)
+absmax = np.maximum(np.abs(x).max(axis=1, keepdims=True), 1e-12)
+s = absmax / 127.0
+q = np.clip(np.round(x / s), -127, 127).astype(np.int8)
+msg = {
+    "round": int(p["round"]),
+    "q": base64.b64encode(q.tobytes()).decode(),
+    "s": [float(v) for v in s[:, 0]],
+    "n": int(n),
+    "row": row,
+    "n_samples": int(p["n_samples"]),
+}
+if int(p["data_seed"]) % 2 == 0:
+    msg["loss"] = float(int(p["data_seed"]) % 7)
+autospada.publish(msg)
+"""
+
+
+def test_round_with_partially_reported_losses_yields_finite_mean():
+    sim = FleetSimulator(SimConfig(n_clients=4, seed=0))
+    driver = FederatedDriver(
+        sim.user,
+        FedConfig(local_steps=1, local_lr=0.1, deadline_fraction=1.0),
+        dim=8,
+        w_true=np.zeros(8, np.float32),
+        n_samples=4,
+        payload_source=_PARTIAL_LOSS_PAYLOAD,
+    )
+    rec = driver.run_round(0, pump=sim.tick)
+    assert rec["participants"] == 4
+    # clients 0 and 2 reported (0 % 7, 2 % 7); 1 and 3 omitted the field —
+    # before the fix this was NaN and poisoned the whole metrics table
+    assert rec["mean_client_loss"] == pytest.approx(1.0)
+
+
+def test_round_with_no_reported_losses_records_none_not_nan():
+    no_loss = _PARTIAL_LOSS_PAYLOAD.replace(
+        'if int(p["data_seed"]) % 2 == 0:\n    msg["loss"] = float(int(p["data_seed"]) % 7)\n',
+        "",
+    )
+    assert '"loss"' not in no_loss
+    sim = FleetSimulator(SimConfig(n_clients=3, seed=0))
+    driver = FederatedDriver(
+        sim.user,
+        FedConfig(local_steps=1, local_lr=0.1, deadline_fraction=1.0),
+        dim=8,
+        w_true=np.zeros(8, np.float32),
+        n_samples=4,
+        payload_source=no_loss,
+    )
+    rec = driver.run_round(0, pump=sim.tick)
+    assert rec["participants"] == 3
+    assert rec["mean_client_loss"] is None
+    # the metrics table renders a None loss as "-", not "None"/"nan"
+    metrics = FleetMetrics()
+    metrics.record(
+        RoundMetrics(
+            round=0,
+            online_at_start=rec["participants"],
+            participants=rec["participants"],
+            canceled=rec["canceled"],
+            ticks=1,
+            published=0,
+            delivered=0,
+            dropped=0,
+            wall_s=0.0,
+            mean_client_loss=rec["mean_client_loss"],
+            dist_to_optimum=rec["dist_to_optimum"],
+        )
+    )
+    row = metrics.format_table().splitlines()[1]
+    assert "nan" not in row and "None" not in row
+    assert row.split()[-2] == "-"  # the loss column

@@ -175,6 +175,131 @@ def test_csv_fleet_plane_aligns_union_of_columns():
 
 
 # --------------------------------------------------------------------- #
+# bugfix: offline rows are NaN-masked in the history ring                #
+# --------------------------------------------------------------------- #
+def test_offline_rows_are_nan_masked_in_history_ring():
+    """Plane time is fleet-global, but a powered-off vehicle observes
+    nothing: its ring rows are NaN while offline, so windows after
+    re-ignition only contain powered-on observations. The latest-value
+    matrix is untouched."""
+    plane = build_plane("mixed", 2, seed=3, history=64)
+    observed = [plane.read(1, "Vehicle.Speed")]  # tick 0, online
+    for _ in range(3):
+        plane.step()
+        observed.append(plane.read(1, "Vehicle.Speed"))
+    plane.set_online(1, False)
+    for _ in range(4):
+        plane.step()
+        # values keep advancing fleet-globally — only the ring is masked
+        assert plane.read(1, "Vehicle.Speed") is not None
+    plane.set_online(1, True)
+    for _ in range(2):
+        plane.step()
+        observed.append(plane.read(1, "Vehicle.Speed"))
+    w = plane.window(1, "Vehicle.Speed", 64)
+    assert w == observed  # 4 pre-off + 2 post-on ticks, nothing in between
+    # the always-online row saw every tick
+    assert len(plane.window(0, "Vehicle.Speed", 64)) == 10
+
+
+def test_reignition_window_excludes_offline_period_in_simulator():
+    sim = FleetSimulator(SimConfig(n_clients=2, seed=0, scenario="mixed"))
+    cid = "veh-001"
+    for _ in range(4):
+        sim.tick()
+    sim.pool.power_off(cid)
+    for _ in range(3):
+        sim.tick()
+    sim.pool.power_on(cid)
+    sim.pool.vehicles[cid].client.run_until_idle()
+    for _ in range(2):
+        sim.tick()
+    churned = sim.pool.vehicles[cid].client.signal_handler.window(
+        "Vehicle.Speed", 64
+    )
+    steady = sim.pool.vehicles["veh-000"].client.signal_handler.window(
+        "Vehicle.Speed", 64
+    )
+    assert len(steady) == 10  # construction + 9 ticks, all observed
+    assert len(churned) == 7  # the 3 ignition-off ticks are not "observed"
+
+
+# --------------------------------------------------------------------- #
+# bugfix: mass admission is amortized (geometric capacity growth)        #
+# --------------------------------------------------------------------- #
+def test_mass_admission_regrows_series_only_o_log_n_times():
+    """Every series regrow is an XLA recompile for jit scenarios; joining
+    28 vehicles one at a time must trigger O(log N) regrows, not 28."""
+    scen = Scenario("urban", seed=1)
+    regrows = []
+
+    def counting_grow(n):
+        regrows.append(n)
+        return scen.series(n)
+
+    plane = FleetSignalPlane(
+        SIGNALS, scen.series(4), history=32, grow_fn=counting_grow
+    )
+    plane.step()
+    before = plane.values.copy()
+    rows = [plane.add_client() for _ in range(28)]
+    assert rows == list(range(4, 32)) and plane.n_clients == 32
+    assert len(regrows) <= 4  # 4 -> 8 -> 16 -> 32
+    # row stability: existing vehicles' streams are untouched
+    assert np.array_equal(plane.values[:4], before)
+    # a freshly-joined row's history starts at the join tick, not before
+    assert len(plane.window(31, "Vehicle.Speed", 32)) == 1
+    plane.step()
+    assert len(plane.window(31, "Vehicle.Speed", 32)) == 2
+    # and the whole live fleet reads valid values post-join
+    assert all(plane.read(i, "Vehicle.Speed") is not None for i in range(32))
+
+
+def test_add_clients_batch_reserves_capacity_once():
+    scen = Scenario("highway", seed=7)
+    regrows = []
+
+    def counting_grow(n):
+        regrows.append(n)
+        return scen.series(n)
+
+    plane = FleetSignalPlane(
+        SIGNALS, scen.series(2), history=16, grow_fn=counting_grow
+    )
+    assert plane.add_clients(30) == list(range(2, 32))
+    assert plane.n_clients == 32 and len(regrows) == 1
+
+
+def test_fixed_size_plane_still_rejects_growth():
+    plane = FleetSignalPlane.from_csv_fleet(["a\n1\n2\n"])
+    with pytest.raises(ValueError, match="fixed fleet size"):
+        plane.add_client()
+
+
+def test_spare_capacity_rows_are_not_readable():
+    # overallocation must not expose phantom vehicles: step() computes all
+    # capacity rows, but reads past n_clients fail fast, as pre-growth
+    scen = Scenario("highway", seed=7)
+    plane = FleetSignalPlane(
+        SIGNALS, scen.series(2), history=16, grow_fn=scen.series
+    )
+    for _ in range(3):  # single joins double capacity: n_clients=5, cap 8
+        plane.add_client()
+    plane.step()
+    assert plane.n_clients == 5 and plane._capacity > 5
+    for bad in (5, plane._capacity - 1, -1):
+        with pytest.raises(IndexError, match="out of range"):
+            plane.read(bad, SIGNALS[0])
+        with pytest.raises(IndexError, match="out of range"):
+            plane.window(bad, SIGNALS[0], 4)
+        with pytest.raises(IndexError, match="out of range"):
+            plane.view(bad)
+        with pytest.raises(IndexError, match="out of range"):
+            plane.set_online(bad, False)
+    assert plane.read(4, SIGNALS[0]) is not None  # live rows still fine
+
+
+# --------------------------------------------------------------------- #
 # simulator determinism with the plane enabled                           #
 # --------------------------------------------------------------------- #
 def test_simulator_with_time_varying_scenario_is_deterministic():
