@@ -2,7 +2,7 @@
 signal plane, the event-driven service scheduler, plane growth, and
 simulator throughput.
 
-Five sections, CSV rows like the rest of the harness:
+Six sections, CSV rows like the rest of the harness:
 
 * ``fleet/agg_*`` — FedAvg server-step latency over N packed int8 deltas,
   per-client reference loop (`aggregate_reference`) vs the batched
@@ -13,6 +13,12 @@ Five sections, CSV rows like the rest of the harness:
   iterators + subscriber callbacks) vs ONE `FleetSignalPlane.step` (a
   single jit'd drive-cycle evaluation for the whole fleet) at N=1024.
   The plane must win at the largest N (CI guard; >= 2x in full mode).
+* ``fleet/plane_sharded_*`` — per-tick fleet signal cost, single-host
+  plane vs the device-sharded plane (`ShardedSignalPlane`: client rows
+  split over a `clients` mesh, one jit step with in/out shardings fusing
+  the scenario eval with the in-place ring write). Bit-for-bit parity is
+  asserted; the sharded step must stay within the smoke floor (and win
+  in full mode).
 * ``fleet/service_*`` — mostly-idle fleet tick: the dense O(N) poll loop
   (`DensePollService`, the parity oracle) vs the event-driven
   `FleetServiceScheduler` (wake hooks + vectorized phase gating,
@@ -55,6 +61,15 @@ TARGET_SPEEDUP_AT_MAX = 5.0
 PLANE_TARGET_SPEEDUP = 2.0
 PLANE_SIZES_FAST = (256,)
 PLANE_SIZES = (256, 1024)
+#: sharded-plane step vs the single-host plane step. The sharded step
+#: fuses the scenario eval with the (donated, in-place) ring-slot write
+#: and never blocks on a host transfer, so it should win outright in
+#: full mode; the smoke floor only catches real regressions (e.g. an
+#: accidental per-tick device->host sync, which shows up as ~5x slower)
+#: without flaking on shared-runner noise at the small fast-mode N.
+SHARDED_MIN_SPEEDUP = 0.7
+SHARDED_TARGET_SPEEDUP = 1.0
+SHARDED_N_FAST, SHARDED_N = 256, 1024
 #: acceptance floor for the event-driven scheduler vs the dense poll loop
 #: on a mostly-idle fleet tick (the ISSUE-4 tentpole claim)
 SERVICE_TARGET_SPEEDUP = 3.0
@@ -217,6 +232,49 @@ def signal_plane_rows(
     return rows, speedups
 
 
+def plane_sharded_rows(
+    fast: bool,
+) -> tuple[list[tuple[str, float, str]], dict[int, float]]:
+    """Per-tick fleet signal cost, host vs device-sharded plane on the
+    same seeded drive-cycle step: the host plane evaluates the jit'd
+    scenario then syncs to a host array and writes the ring slot in
+    numpy; the sharded plane runs ONE jit call (scenario + in-place ring
+    write, client rows split across devices) and only syncs on read. The
+    two must stay bit-for-bit identical — asserted here, sampled."""
+    from repro.fleet.scenarios import Scenario
+
+    n = SHARDED_N_FAST if fast else SHARDED_N
+    reps = 10 if fast else 30
+    scen = Scenario("mixed", seed=n)
+    host, sharded = scen.plane(n), scen.sharded_plane(n)
+    host.step()  # warm-up: compile both steps
+    sharded.step()
+    sharded.block_until_ready()
+
+    def sharded_step() -> None:
+        sharded.step()
+        sharded.block_until_ready()  # fairness: host.step blocks too
+
+    t_host, t_sharded = _time_pair(host.step, sharded_step, reps)
+    assert np.array_equal(host.values, sharded.values), (
+        "sharded plane diverged from the host plane"
+    )
+    speedups = {n: t_host / t_sharded}
+    return [
+        (
+            f"fleet/plane_sharded_host_N{n}",
+            t_host,
+            f"single-host plane step, {n} rows",
+        ),
+        (
+            f"fleet/plane_sharded_step_N{n}",
+            t_sharded,
+            f"{speedups[n]:.2f}x vs host plane; {sharded.devices} device(s), "
+            f"capacity {sharded._capacity}",
+        ),
+    ], speedups
+
+
 def service_rows(
     fast: bool,
 ) -> tuple[list[tuple[str, float, str]], dict[int, float]]:
@@ -367,6 +425,9 @@ def rows(
     plane, plane_speedups = _measure_guarded(
         signal_plane_rows, _plane_guard, fast
     )
+    sharded, sharded_speedups = _measure_guarded(
+        plane_sharded_rows, _plane_sharded_guard, fast
+    )
     service, service_speedups = _measure_guarded(
         service_rows, _service_guard, fast
     )
@@ -374,10 +435,14 @@ def rows(
     guards = {
         "agg": agg_speedups,
         "plane": plane_speedups,
+        "plane_sharded": sharded_speedups,
         "service": service_speedups,
         "grow": grow_speedups,
     }
-    return agg + plane + service + grow + simulator_rows(fast), guards
+    return (
+        agg + plane + sharded + service + grow + simulator_rows(fast),
+        guards,
+    )
 
 
 def _agg_guard(speedups: dict[int, float], *, fast: bool) -> str | None:
@@ -409,6 +474,24 @@ def _plane_guard(speedups: dict[int, float], *, fast: bool) -> str | None:
         return (
             f"signal plane speedup at N={n_max} is "
             f"{speedups[n_max]:.1f}x < {PLANE_TARGET_SPEEDUP:.0f}x target"
+        )
+    return None
+
+
+def _plane_sharded_guard(
+    speedups: dict[int, float], *, fast: bool
+) -> str | None:
+    n_max = max(speedups)
+    if speedups[n_max] < SHARDED_MIN_SPEEDUP:
+        return (
+            f"sharded plane step fell behind the host plane at N={n_max}: "
+            f"{speedups[n_max]:.2f}x < {SHARDED_MIN_SPEEDUP:.1f}x floor "
+            f"(a per-tick host sync regression looks like this)"
+        )
+    if not fast and speedups[n_max] < SHARDED_TARGET_SPEEDUP:
+        return (
+            f"sharded plane speedup at N={n_max} is "
+            f"{speedups[n_max]:.2f}x < {SHARDED_TARGET_SPEEDUP:.1f}x target"
         )
     return None
 
@@ -446,6 +529,7 @@ def _grow_guard(speedups: dict[int, float], *, fast: bool) -> str | None:
 _GUARDS = {
     "agg": _agg_guard,
     "plane": _plane_guard,
+    "plane_sharded": _plane_sharded_guard,
     "service": _service_guard,
     "grow": _grow_guard,
 }

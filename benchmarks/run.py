@@ -1,12 +1,91 @@
 """Benchmark harness — one section per paper table/figure + the roofline
 summary from the dry-run artifacts. Prints ``name,us_per_call,derived``
 CSV rows. Run: PYTHONPATH=src python -m benchmarks.run [--fast]
+
+``--json PATH`` additionally writes the machine-readable result —
+section, metric, best-of-k seconds, and the guarded speedups — which CI
+uploads as ``BENCH_fast.json`` so the bench trajectory is queryable, not
+just CSV text in a log. When a committed baseline exists
+(``benchmarks/BENCH_baseline.json``), ``trend/*`` rows compare each
+guarded speedup against it; trend lines are informational (machines
+differ) — the hard floor stays in ``fleet_scale.check_guard``.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+#: committed reference point for the trend lines
+DEFAULT_BASELINE = os.path.join(
+    os.path.dirname(__file__), "BENCH_baseline.json"
+)
+
+
+def _section_of(name: str) -> str:
+    return name.split("/", 1)[0] if "/" in name else name
+
+
+def write_json(
+    path: str,
+    rows: list[tuple[str, float, str]],
+    speedups: dict[str, dict[int, float]],
+    *,
+    fast: bool,
+    guard_error: str | None,
+) -> None:
+    doc = {
+        "schema": 1,
+        "mode": "fast" if fast else "full",
+        "guard_error": guard_error,
+        "rows": [
+            {
+                "section": _section_of(name),
+                "metric": name,
+                "best_of_k_seconds": us / 1e6,
+                "derived": derived,
+            }
+            for name, us, derived in rows
+        ],
+        "speedups": {
+            section: {str(k): v for k, v in per_n.items()}
+            for section, per_n in speedups.items()
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def trend_rows(
+    speedups: dict[str, dict[int, float]], baseline_path: str
+) -> list[str]:
+    """``trend/<section>_<N>`` CSV rows: current guarded speedup vs the
+    committed baseline's. Missing/unreadable baseline degrades to a note
+    (first run, or a section added since the baseline was captured)."""
+    try:
+        with open(baseline_path) as f:
+            base = json.load(f).get("speedups", {})
+    except (OSError, ValueError) as e:
+        return [f"trend/no_baseline,0,{baseline_path}: {e}"]
+    out = []
+    for section, per_n in sorted(speedups.items()):
+        for n, cur in sorted(per_n.items()):
+            ref = base.get(section, {}).get(str(n))
+            if ref is None:
+                out.append(
+                    f"trend/{section}_{n},{cur:.2f},"
+                    f"{cur:.2f}x speedup; not in baseline yet"
+                )
+            else:
+                delta = (cur / ref - 1.0) * 100.0
+                out.append(
+                    f"trend/{section}_{n},{cur:.2f},"
+                    f"{cur:.2f}x vs baseline {ref:.2f}x ({delta:+.0f}%)"
+                )
+    return out
 
 
 def _kernel_rows(fast: bool) -> list[tuple[str, float, str]]:
@@ -74,6 +153,20 @@ def _throughput_rows(fast: bool) -> list[tuple[str, float, str]]:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="fewer repetitions")
+    ap.add_argument(
+        "--json",
+        metavar="PATH",
+        default=None,
+        help="also write machine-readable results (section, metric, "
+        "best-of-k seconds, speedups) to PATH — the CI artifact",
+    )
+    ap.add_argument(
+        "--baseline",
+        metavar="PATH",
+        default=DEFAULT_BASELINE,
+        help="baseline JSON for the trend/* rows "
+        "(default: the committed benchmarks/BENCH_baseline.json)",
+    )
     args = ap.parse_args()
     fast = args.fast
 
@@ -102,9 +195,13 @@ def main() -> None:
         print(f"roofline/skipped,0,run repro.launch.dryrun first ({e})")
 
     # perf-regression guard: a vectorized fleet path (batched aggregation,
-    # columnar signal-plane step) losing to its per-client Python loop
-    # fails the whole benchmark run (and with it CI)
+    # columnar/sharded signal-plane step) losing to its per-client Python
+    # loop fails the whole benchmark run (and with it CI)
     err = fleet_scale.check_guard(speedups, fast=fast)
+    for line in trend_rows(speedups, args.baseline):
+        print(line)
+    if args.json:
+        write_json(args.json, rows, speedups, fast=fast, guard_error=err)
     if err:
         print(f"fleet/guard_failed,0,{err}")
         sys.exit(1)

@@ -1,9 +1,11 @@
+from repro.core.plane_sharded import ShardedSignalPlane
 from repro.fleet.analytics import (
     AnalyticsConfig,
     AnalyticsDriver,
     WindowStats,
     merge_moments_reference,
 )
+from repro.fleet.churn import DenseChurn, EventChurn, geometric_gap, make_churn
 from repro.fleet.compression import (
     ErrorFeedback,
     batched_dequant_mean,
@@ -20,7 +22,7 @@ from repro.fleet.rounds import (
     pump_until_deadline,
     stack_deltas,
 )
-from repro.fleet.scenarios import SCENARIOS, SIGNALS, Scenario, build_plane
+from repro.fleet.scenarios import PLANES, SCENARIOS, SIGNALS, Scenario, build_plane
 from repro.fleet.service import (
     DensePollService,
     FleetServiceScheduler,
@@ -29,12 +31,13 @@ from repro.fleet.service import (
 from repro.fleet.simulator import FleetSimulator, SimConfig
 
 __all__ = [
-    "AnalyticsConfig", "AnalyticsDriver", "DensePollService",
-    "ErrorFeedback", "FedConfig", "FederatedDriver", "FleetMetrics",
-    "FleetPool", "FleetServiceScheduler", "FleetSimulator", "RoundMetrics",
-    "SCENARIOS", "SIGNALS", "Scenario", "SimConfig", "WindowStats",
-    "aggregate_deltas", "aggregate_packed", "aggregate_reference",
-    "batched_dequant_mean", "build_plane", "client_delta", "local_sgd",
-    "make_codec", "make_service", "mean_reported_loss",
+    "AnalyticsConfig", "AnalyticsDriver", "DenseChurn", "DensePollService",
+    "ErrorFeedback", "EventChurn", "FedConfig", "FederatedDriver",
+    "FleetMetrics", "FleetPool", "FleetServiceScheduler", "FleetSimulator",
+    "PLANES", "RoundMetrics", "SCENARIOS", "SIGNALS", "Scenario",
+    "ShardedSignalPlane", "SimConfig", "WindowStats", "aggregate_deltas",
+    "aggregate_packed", "aggregate_reference", "batched_dequant_mean",
+    "build_plane", "client_delta", "geometric_gap", "local_sgd",
+    "make_churn", "make_codec", "make_service", "mean_reported_loss",
     "merge_moments_reference", "pump_until_deadline", "stack_deltas",
 ]

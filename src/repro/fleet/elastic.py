@@ -65,6 +65,10 @@ class FleetPool:
         #: attached fleet service (repro.fleet.service) notified on power
         #: transitions so wake hooks follow the live EdgeClient instance
         self._service = None
+        #: attached churn schedule (repro.fleet.churn) notified on power
+        #: transitions so event times always reschedule from the actual
+        #: ignition state, even when tests/drivers toggle power directly
+        self._churn = None
         self._next_index = 0
         self.vehicles: dict[str, Vehicle] = {}
         if plane is not None and n_vehicles > plane.n_clients:
@@ -77,6 +81,12 @@ class FleetPool:
         """Register a fleet service (scheduler or dense oracle) to receive
         power-transition hooks for wake re-wiring."""
         self._service = service
+
+    def attach_churn(self, churn) -> None:
+        """Register a churn schedule (repro.fleet.churn) to receive power
+        transitions, so geometric event times follow the real ignition
+        state."""
+        self._churn = churn
 
     # -- fleet membership ----------------------------------------------- #
     def _make_vehicle(self, i: int) -> Vehicle:
@@ -127,6 +137,8 @@ class FleetPool:
             self.plane.set_online(i, True)
         if self._service is not None:
             self._service.client_powered_on(i, v.client)
+        if self._churn is not None:
+            self._churn.notify(cid, i, True)
 
     def power_off(self, cid: str) -> None:
         """Ignition off mid-anything: volatile state is lost, disk survives."""
@@ -143,6 +155,8 @@ class FleetPool:
             self.plane.set_online(i, False)
         if self._service is not None:
             self._service.client_powered_off(i)
+        if self._churn is not None:
+            self._churn.notify(cid, i, False)
 
     def online(self) -> list[str]:
         return [cid for cid, v in self.vehicles.items() if v.client is not None]

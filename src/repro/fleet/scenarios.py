@@ -58,21 +58,39 @@ SCENARIOS = ("road-grade", "highway", "urban", "idle", "mixed")
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """A named, seeded drive-cycle family. `series(n)` returns the plane
-    step: a callable `t -> (n, len(SIGNALS))` float32 matrix."""
+    """A named, seeded drive-cycle family. `step_fn(n)` is the scenario's
+    pure jax step — a traceable `t -> (n, len(SIGNALS))` float32 matrix —
+    shared verbatim by both plane implementations, so the single-host and
+    the sharded plane are bit-for-bit identical by construction.
+    `series(n)` wraps it for the host plane (jit + numpy)."""
 
     name: str
     seed: int = 0
     signals: tuple[str, ...] = SIGNALS
 
-    def series(self, n_clients: int) -> Callable[[int], np.ndarray]:
+    def step_fn(self, n_clients: int) -> Callable[[jax.Array], jax.Array]:
         if self.name == "road-grade":
-            return _constant_road_grade_series(n_clients)
+            return _constant_road_grade_step(n_clients)
         if self.name not in SCENARIOS:
             raise ValueError(
                 f"unknown scenario {self.name!r}; pick one of {SCENARIOS}"
             )
-        return _drive_cycle_series(self.name, n_clients, self.seed)
+        return _drive_cycle_step(self.name, n_clients, self.seed)
+
+    def series(self, n_clients: int) -> Callable[[int], np.ndarray]:
+        if self.name == "road-grade":
+            # host fast path: the step is constant in t, so the hot tick
+            # returns one cached numpy array — no jit dispatch, no
+            # device->host copy (same bits as the sharded step, which
+            # jnp.asarrays this very array)
+            vals = _constant_road_grade_values(n_clients)
+            return lambda t: vals
+        step = jax.jit(self.step_fn(n_clients))
+
+        def series(t: int) -> np.ndarray:
+            return np.asarray(step(jnp.int32(t)))
+
+        return series
 
     def plane(self, n_clients: int, *, history: int = 256) -> FleetSignalPlane:
         return FleetSignalPlane(
@@ -82,18 +100,50 @@ class Scenario:
             grow_fn=self.series,
         )
 
+    def sharded_plane(
+        self, n_clients: int, *, history: int = 256, mesh=None
+    ) -> "ShardedSignalPlane":
+        """The same scenario over a device-sharded plane: the per-tick
+        step is jit'd once with in/out shardings over a client-axis mesh
+        (`repro.sharding.fleet`), so each device advances only its rows."""
+        from repro.core.plane_sharded import ShardedSignalPlane
+
+        return ShardedSignalPlane(
+            self.signals,
+            n_clients,
+            self.step_fn,
+            history=history,
+            mesh=mesh,
+        )
+
+
+#: plane implementations `build_plane` can select
+PLANES = ("host", "sharded")
+
 
 def build_plane(
-    name: str, n_clients: int, seed: int = 0, *, history: int = 256
+    name: str,
+    n_clients: int,
+    seed: int = 0,
+    *,
+    history: int = 256,
+    plane: str = "host",
+    mesh=None,
 ) -> FleetSignalPlane:
-    """The one-liner the simulator uses."""
-    return Scenario(name, seed).plane(n_clients, history=history)
+    """The one-liner the simulator uses. ``plane`` picks the single-host
+    columnar plane (default) or the device-sharded plane."""
+    scen = Scenario(name, seed)
+    if plane == "host":
+        return scen.plane(n_clients, history=history)
+    if plane == "sharded":
+        return scen.sharded_plane(n_clients, history=history, mesh=mesh)
+    raise ValueError(f"unknown plane {plane!r}; pick one of {PLANES}")
 
 
 # --------------------------------------------------------------------- #
 # the legacy constant default                                            #
 # --------------------------------------------------------------------- #
-def _constant_road_grade_series(n: int) -> Callable[[int], np.ndarray]:
+def _constant_road_grade_values(n: int) -> np.ndarray:
     """Time-invariant per-vehicle signals; `Vehicle.RoadGrade` reproduces
     the historical ``constant(0.01 * (i % 7))`` exactly. Constant in t so
     runs whose rounds consume different tick counts (lossy vs fault-free)
@@ -103,44 +153,59 @@ def _constant_road_grade_series(n: int) -> Callable[[int], np.ndarray]:
     speed = np.full(n, 80.0, np.float32)
     fuel = (0.6 + 0.04 * speed + 60.0 * np.maximum(grade, 0.0)).astype(np.float32)
     temp = np.full(n, 90.0, np.float32)
-    vals = np.stack([speed, fuel, grade, temp], axis=1).astype(np.float32)
-
-    def series(t: int) -> np.ndarray:
-        return vals
-
-    return series
+    return np.stack([speed, fuel, grade, temp], axis=1).astype(np.float32)
 
 
-# --------------------------------------------------------------------- #
-# drive cycles: one jit step for the whole fleet                         #
-# --------------------------------------------------------------------- #
-def _drive_cycle_series(
-    name: str, n: int, seed: int
-) -> Callable[[int], np.ndarray]:
-    base = jax.random.PRNGKey(seed)
-    idx = jnp.arange(n, dtype=jnp.uint32)
-    ckeys = jax.vmap(lambda i: jax.random.fold_in(base, i))(idx)
-    u = jax.vmap(lambda k: jax.random.uniform(k, (6,)))(ckeys)  # (n, 6)
+def _constant_road_grade_step(n: int) -> Callable[[jax.Array], jax.Array]:
+    vals = _constant_road_grade_values(n)
 
-    if name == "mixed":
-        c0, c1 = _MIX[0], _MIX[0] + _MIX[1]
-        regime = jnp.where(u[:, 0] < c0, _HIGHWAY, jnp.where(u[:, 0] < c1, _URBAN, _IDLE))
-    else:
-        regime = jnp.full(
-            (n,), {"highway": _HIGHWAY, "urban": _URBAN, "idle": _IDLE}[name],
-            jnp.int32,
-        )
-
-    cruise = 95.0 + 25.0 * u[:, 1]        # highway set speed, km/h
-    peak = 28.0 + 24.0 * u[:, 1]          # urban peak between stops
-    hw_period = 40.0 + 40.0 * u[:, 2]     # highway oscillation, ticks
-    ub_period = 8.0 + 10.0 * u[:, 2]      # urban stop-go cycle, ticks
-    phase = 2.0 * jnp.pi * u[:, 3]
-    grade0 = 0.06 * (u[:, 4] - 0.5)
-    noise = 0.3 + 0.7 * u[:, 5]
-
-    @jax.jit
     def step(t: jax.Array) -> jax.Array:
+        return jnp.asarray(vals)
+
+    return step
+
+
+# --------------------------------------------------------------------- #
+# drive cycles: one pure step for the whole fleet                        #
+# --------------------------------------------------------------------- #
+def _drive_cycle_step(
+    name: str, n: int, seed: int
+) -> Callable[[jax.Array], jax.Array]:
+    """The scenario's pure per-tick function, `t -> (n, n_signals)` f32.
+
+    Everything — per-client keys included — is computed *inside* the
+    returned function from the scalar seed, so the function carries no
+    captured device buffers: the host plane jits it plain, the sharded
+    plane jits the identical function with client-axis in/out shardings
+    (every op is elementwise per row, so partitioning inserts no
+    collectives), and the two evaluate bit-for-bit the same."""
+
+    def step(t: jax.Array) -> jax.Array:
+        base = jax.random.PRNGKey(seed)
+        idx = jnp.arange(n, dtype=jnp.uint32)
+        ckeys = jax.vmap(lambda i: jax.random.fold_in(base, i))(idx)
+        u = jax.vmap(lambda k: jax.random.uniform(k, (6,)))(ckeys)  # (n, 6)
+
+        if name == "mixed":
+            c0, c1 = _MIX[0], _MIX[0] + _MIX[1]
+            regime = jnp.where(
+                u[:, 0] < c0, _HIGHWAY, jnp.where(u[:, 0] < c1, _URBAN, _IDLE)
+            )
+        else:
+            regime = jnp.full(
+                (n,),
+                {"highway": _HIGHWAY, "urban": _URBAN, "idle": _IDLE}[name],
+                jnp.int32,
+            )
+
+        cruise = 95.0 + 25.0 * u[:, 1]        # highway set speed, km/h
+        peak = 28.0 + 24.0 * u[:, 1]          # urban peak between stops
+        hw_period = 40.0 + 40.0 * u[:, 2]     # highway oscillation, ticks
+        ub_period = 8.0 + 10.0 * u[:, 2]      # urban stop-go cycle, ticks
+        phase = 2.0 * jnp.pi * u[:, 3]
+        grade0 = 0.06 * (u[:, 4] - 0.5)
+        noise = 0.3 + 0.7 * u[:, 5]
+
         tf = t.astype(jnp.float32)
         tkeys = jax.vmap(lambda k: jax.random.fold_in(k, t))(ckeys)
         eps = jax.vmap(lambda k: jax.random.normal(k, (2,)))(tkeys)  # (n, 2)
@@ -181,10 +246,7 @@ def _drive_cycle_series(
 
         return jnp.stack([speed, fuel, grade, temp], axis=1).astype(jnp.float32)
 
-    def series(t: int) -> np.ndarray:
-        return np.asarray(step(jnp.int32(t)))
-
-    return series
+    return step
 
 
 # --------------------------------------------------------------------- #

@@ -14,7 +14,9 @@ Drives hundreds-to-thousands of `EdgeClient` instances against one
 
 Time is an integer tick. One `tick()`:
 
-1. applies churn decisions from the simulation RNG (seeded);
+1. applies the churn toggles *due* this tick — seeded geometric
+   inter-arrival event times per vehicle (`repro.fleet.churn`), popped
+   from a heap in O(events), not one RNG draw per vehicle per tick;
 2. advances the broker clock, releasing delayed messages (`Broker.advance`);
 3. advances the fleet's signals — ONE columnar `FleetSignalPlane` step
    (a jit'd drive-cycle scenario from `repro.fleet.scenarios`) instead of
@@ -47,6 +49,7 @@ from repro.core.broker import Broker, seeded_fault_plan
 from repro.core.server import make_platform
 from repro.core.user import User
 from repro.fleet.analytics import AnalyticsConfig, AnalyticsDriver
+from repro.fleet.churn import make_churn
 from repro.fleet.elastic import FleetPool
 from repro.fleet.federated import FedConfig
 from repro.fleet.metrics import FleetMetrics, RoundMetrics
@@ -69,6 +72,10 @@ class SimConfig:
     scenario: str = "road-grade"
     #: plane history ring depth (backs `autospada.get_signal_window`)
     signal_history: int = 256
+    #: signal-plane implementation: "host" (one columnar host array) or
+    #: "sharded" (rows sharded across devices on a `clients` mesh — the
+    #: million-vehicle layout; bit-for-bit identical to "host")
+    plane: str = "host"
     # -- broker faults -------------------------------------------------- #
     p_drop: float = 0.0        # QoS-0 notification drop probability
     p_duplicate: float = 0.0   # QoS-1 redelivery probability
@@ -86,6 +93,11 @@ class SimConfig:
     #: set, O(runnable) per tick) or "dense" (the original O(N) poll loop,
     #: kept as the parity oracle — both yield identical interleavings)
     service: str = "scheduler"
+    #: churn implementation: "event" (seeded geometric inter-arrival
+    #: times per vehicle, O(events)/tick via a heap) or "dense" (the
+    #: O(N)-scan oracle over the same per-vehicle event streams — the
+    #: parity witness, identical toggle sequences)
+    churn: str = "event"
 
 
 class FleetSimulator:
@@ -120,6 +132,7 @@ class FleetSimulator:
                 cfg.n_clients,
                 cfg.seed,
                 history=cfg.signal_history,
+                plane=cfg.plane,
             )
         )
         self.pool = FleetPool(
@@ -134,9 +147,16 @@ class FleetSimulator:
         self.user = User(self.server, self.broker)
         self.metrics = FleetMetrics()
         self.t = 0
-        # churn decisions come from their own seeded stream so adding a
-        # fault knob never perturbs who leaves when
-        self._churn_rng = np.random.default_rng((cfg.seed, 0xC0FFEE))
+        # churn: seeded geometric *event times* per vehicle (O(events) per
+        # tick) instead of a per-vehicle per-tick coin; each vehicle draws
+        # from its own stream so adding a fault knob — or another vehicle —
+        # never perturbs who leaves when
+        self.churn = make_churn(cfg.churn, cfg.seed, cfg.p_leave, cfg.p_return)
+        self.pool.attach_churn(self.churn)
+        for cid, v in self.pool.vehicles.items():
+            self.churn.watch(
+                cid, v.metadata["index"], v.client is not None, now=0
+            )
         # seeded straggler subset: a fixed permutation prefix
         order = np.random.default_rng((cfg.seed, 0x57A6)).permutation(
             cfg.n_clients
@@ -168,13 +188,14 @@ class FleetSimulator:
         """One world step. Deterministic given the config."""
         self.t += 1
         cfg = self.cfg
-        # 1. churn: ignition off / on, decided per vehicle in fleet order
+        # 1. churn: pop the ignition toggles due this tick (fleet order) —
+        #    O(events), not O(N); the power transition re-enters the
+        #    schedule via `FleetPool.attach_churn` to draw the next gap
         if cfg.p_leave or cfg.p_return:
-            for cid, v in self.pool.vehicles.items():
-                r = self._churn_rng.random()
-                if v.client is not None and r < cfg.p_leave:
+            for cid in self.churn.pop_due(self.t):
+                if self.pool.vehicles[cid].client is not None:
                     self.pool.power_off(cid)
-                elif v.client is None and r < cfg.p_return:
+                else:
                     self.pool.power_on(cid)
         # 2. release delayed broker deliveries due at this tick
         self.broker.advance(1)

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.fleet.analytics import AnalyticsConfig
 from repro.fleet.federated import FedConfig
-from repro.fleet.scenarios import SCENARIOS
+from repro.fleet.scenarios import PLANES, SCENARIOS
 from repro.fleet.simulator import FleetSimulator, SimConfig
 
 
@@ -40,6 +40,12 @@ def build_parser() -> argparse.ArgumentParser:
                     help="drive-cycle scenario for the signal plane "
                          "(default: road-grade for federated, mixed for "
                          "analytics)")
+    ap.add_argument("--plane", choices=PLANES, default="host",
+                    help="signal-plane implementation: one columnar host "
+                         "array, or rows sharded across devices on a "
+                         "`clients` mesh (run under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8 to "
+                         "simulate devices on CPU); bit-for-bit identical")
     ap.add_argument("--dim", type=int, default=32, help="model dimension")
     ap.add_argument("--drop", type=float, default=0.0, help="QoS-0 drop prob")
     ap.add_argument("--duplicate", type=float, default=0.0, help="QoS-1 dup prob")
@@ -80,6 +86,7 @@ def main() -> None:
             n_clients=args.clients,
             seed=args.seed,
             scenario=scenario,
+            plane=args.plane,
             p_drop=args.drop,
             p_duplicate=args.duplicate,
             max_delay=args.delay,

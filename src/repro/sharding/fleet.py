@@ -1,0 +1,68 @@
+"""Fleet-plane sharding: the client-axis mesh and its PartitionSpecs.
+
+The model planner (`repro.sharding.planner`) shards *parameter* pytrees
+over a 2-D ``(data, model)`` mesh. The fleet signal plane has a much
+simpler layout problem: every array is client-major — ``values`` is
+``(n_clients, n_signals)``, the history ring is ``(history, n_clients,
+n_signals)``, the offline mask is ``(n_clients,)`` — and every per-tick
+operation is elementwise per client row. So the whole plane shards on ONE
+axis, ``clients``, and the drive-cycle step partitions with zero
+collectives: each device advances only its own row shard.
+
+Like the planner, everything here is pure metadata (meshes and
+NamedShardings); nothing touches device buffers.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+#: the one mesh axis the fleet plane shards over
+CLIENT_AXIS = "clients"
+
+
+def client_mesh(devices: Sequence[jax.Device] | None = None) -> Mesh:
+    """A 1-D mesh over every available device (or an explicit subset),
+    with the single ``clients`` axis the plane arrays shard on. Under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` this yields 8
+    simulated CPU devices — the CI multi-device lane."""
+    devs = list(jax.devices() if devices is None else devices)
+    return Mesh(np.array(devs), (CLIENT_AXIS,))
+
+
+def device_count(mesh: Mesh) -> int:
+    return int(mesh.shape[CLIENT_AXIS])
+
+
+def round_up_clients(n: int, mesh: Mesh) -> int:
+    """Round a client capacity up to a multiple of the device count, so a
+    geometric capacity double always lands on an evenly divisible layout:
+    every device keeps whole rows and growth never forces a resharding
+    collective on the hot tick path."""
+    d = device_count(mesh)
+    return max(d, -(-int(n) // d) * d)
+
+
+def values_sharding(mesh: Mesh) -> NamedSharding:
+    """``(n_clients, n_signals)`` — rows split across devices."""
+    return NamedSharding(mesh, P(CLIENT_AXIS, None))
+
+
+def ring_sharding(mesh: Mesh) -> NamedSharding:
+    """``(history, n_clients, n_signals)`` — the ring slot axis stays
+    whole on every device (slot writes are per-device local); the client
+    axis splits."""
+    return NamedSharding(mesh, P(None, CLIENT_AXIS, None))
+
+
+def mask_sharding(mesh: Mesh) -> NamedSharding:
+    """``(n_clients,)`` offline mask — aligned with the values rows."""
+    return NamedSharding(mesh, P(CLIENT_AXIS))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """Scalars (the tick counter) are replicated."""
+    return NamedSharding(mesh, P())
