@@ -33,7 +33,7 @@ from repro.core.signals import (
     SignalHandler,
 )
 from repro.core.statestore import StateStore
-from repro.core.user import User
+from repro.core.user import TaskCounts, User
 
 __all__ = [
     "Assignment", "Broker", "ContainerExit", "CsvSignalBroker", "EdgeClient",
@@ -41,6 +41,6 @@ __all__ = [
     "NetworkError", "Parameters", "Payload", "PayloadContext",
     "PlaneSignalView", "RandomSignalBroker", "ResourceLimits", "Result",
     "ScriptedSignalBroker", "Server", "SignalHandler", "StateStore", "Task",
-    "TaskCanceled", "TaskStatus", "User", "client_clock_topic",
+    "TaskCanceled", "TaskCounts", "TaskStatus", "User", "client_clock_topic",
     "dummy_context", "make_platform", "run_inline", "seeded_fault_plan",
 ]

@@ -120,12 +120,25 @@ class Subscription:
     `wake` is the delivery hook event-driven schedulers rely on: when set,
     it is invoked (outside the queue lock) after every `_offer`, so a
     subscriber becomes runnable the moment a message lands instead of
-    being polled every tick."""
+    being polled every tick.
 
-    def __init__(self, pattern: str, qos: int, order: int = 0):
+    `reliable` models the user-side AMQP leg (paper §3.4.1): the user's
+    queue lives in the datacenter next to the server, so the vehicle-link
+    fault schedule's *delay* does not apply — deliveries land the same
+    tick they are published. Duplicates still occur (AMQP is at-least-once
+    here too), so reliable consumers must stay idempotent. Event-driven
+    round accounting (`AssignmentDoc.counts`) depends on this: a status
+    transition is observed the instant the store commits it, which is what
+    keeps the event counters bit-for-bit in step with the dense
+    `statuses()` oracle."""
+
+    def __init__(
+        self, pattern: str, qos: int, order: int = 0, reliable: bool = False
+    ):
         self.pattern = pattern
         self.qos = qos
         self.order = order  # broker-wide subscription sequence number
+        self.reliable = reliable
         self.wake: Callable[[], None] | None = None
         self._queue: deque[Message] = deque()
         self._lock = threading.Lock()
@@ -182,8 +195,12 @@ class Broker:
         #: (due_tick, enqueue_order, subscription, message)
         self._delayed: list[tuple[int, int, Subscription, Message]] = []
 
-    def subscribe(self, pattern: str, qos: int = 0) -> Subscription:
-        sub = Subscription(pattern, qos, order=next(self._sub_order))
+    def subscribe(
+        self, pattern: str, qos: int = 0, *, reliable: bool = False
+    ) -> Subscription:
+        sub = Subscription(
+            pattern, qos, order=next(self._sub_order), reliable=reliable
+        )
         with self._lock:
             if _is_exact(pattern):
                 self._exact.setdefault(pattern, []).append(sub)
@@ -216,7 +233,7 @@ class Broker:
         subs.sort(key=lambda s: s.order)
         for sub in subs:
             eff_qos = min(qos, sub.qos)
-            if eff_qos == 0 and self._faults.drop(msg):
+            if eff_qos == 0 and not sub.reliable and self._faults.drop(msg):
                 self.dropped += 1
                 continue
             self._deliver(sub, msg)
@@ -226,7 +243,7 @@ class Broker:
         return msg
 
     def _deliver(self, sub: Subscription, msg: Message) -> None:
-        ticks = self._faults.delay(msg)
+        ticks = 0 if sub.reliable else self._faults.delay(msg)
         if ticks > 0:
             with self._lock:
                 heapq.heappush(

@@ -32,8 +32,49 @@ class TaskCanceled(Exception):
     """Raised inside payload code when the task has been canceled."""
 
 
+#: The frozen user-facing `autospada` contract (paper §5.1). Payload code
+#: may rely on exactly these names — in every execution mode (attached,
+#: dummy, containerized) and every future release; additions are
+#: deliberate API changes and removals are breaking. The sandbox binds
+#: the `PayloadContext` instance itself as the `autospada` module, so
+#: `autospada.__all__` inside a payload enumerates this same tuple.
+#: tests/test_api_surface.py pins it against accidental drift.
+AUTOSPADA_API = (
+    "get_signal",
+    "get_signal_window",
+    "publish",
+    "get_parameters",
+    "cache_state",
+    "load_state",
+    "clear_state",
+    "sleep",
+    "time",
+)
+
+__all__ = ["AUTOSPADA_API", "PayloadContext", "TaskCanceled", "dummy_context"]
+
+
 class PayloadContext:
-    """One task-container's view of the world."""
+    """One task-container's view of the world.
+
+    The public methods named in `AUTOSPADA_API` are the whole payload
+    surface. Two cross-cutting guarantees every method shares:
+
+    * **determinism** — attached contexts read simulated state (signal
+      plane rows, parameter documents, the injected clock) that is a pure
+      function of the simulation config and tick; a payload that calls
+      only this API is replayable bit-for-bit at a fixed seed.
+    * **virtual clocks** — `sleep`/`time` run against the injected clock;
+      under a simulated (virtual) clock, `sleep` never burns wall time
+      and `time` advances only when the world pumps.
+
+    `cancel()` is deliberately *not* part of the payload surface: it is
+    the host-side control edge (the `docker stop` analogue).
+    """
+
+    #: `import autospada` resolves to this object inside payloads, so the
+    #: conventional `__all__` lookup works there too
+    __all__ = AUTOSPADA_API
 
     def __init__(
         self,
@@ -76,8 +117,12 @@ class PayloadContext:
     def cancel(self) -> None:
         self._cancel.set()
 
-    # -- the user-facing API ------------------------------------------ #
+    # -- the user-facing API (AUTOSPADA_API — the frozen contract) ----- #
     def get_signal(self, name: str) -> float | None:
+        """Latest value of a vehicle signal, or None if unknown. Attached
+        contexts read the deterministic signal plane (a pure function of
+        scenario, seed, and tick); the dummy context draws seeded
+        randoms."""
         self._check_cancel()
         return self._get_signal(name)
 
@@ -92,24 +137,33 @@ class PayloadContext:
         return [] if v is None else [float(v)]
 
     def publish(self, value: Any) -> None:
+        """Publish a JSON-serializable result to the platform. Delivery
+        is at-least-once (QoS 1): the server deduplicates by sequence
+        number, so publishing is idempotent end to end."""
         self._check_cancel()
         json.dumps(value, default=str)  # enforce JSON-serializability
         self._publish(value)
         self.published_count += 1
 
     def get_parameters(self) -> Any:
+        """The task's immutable Parameters document (None if the task
+        carries none). Identical on every read and every re-run."""
         self._check_cancel()
         return self._parameters
 
     def cache_state(self, value: Any) -> None:
+        """Persist intermediate state under the task's key: it survives
+        client restarts and is removed when the task completes."""
         self._check_cancel()
         self._state_cache[self._task_key] = value
 
     def load_state(self) -> Any:
+        """Previously cached state for this task, or None."""
         self._check_cancel()
         return self._state_cache.get(self._task_key)
 
     def clear_state(self) -> None:
+        """Drop this task's cached state (idempotent)."""
         self._state_cache.pop(self._task_key, None)
 
     def sleep(self, seconds: float) -> None:
@@ -130,6 +184,9 @@ class PayloadContext:
                 time.sleep(min(0.002, max(0.0, deadline - self._clock())))
 
     def time(self) -> float:
+        """The task's clock. Under a virtual (simulated) clock this is
+        logical time that advances only when the world pumps — never
+        wall time — so payload timing logic stays deterministic."""
         return self._clock()
 
 

@@ -75,7 +75,18 @@ class Server:
         return self._store.put_assignment(assignment, tasks)
 
     def cancel_task(self, task_id: str) -> bool:
-        return self._store.cancel_task(task_id)
+        ok = self._store.cancel_task(task_id)
+        if ok:
+            # fan the terminal transition out on the status stream, exactly
+            # like `submit` does for FINISHED/ERROR: event-driven consumers
+            # (AssignmentDoc.counts) must see every lifecycle edge
+            task = self._store.get_task(task_id)
+            self._broker.publish(
+                assignment_status_topic(task.assignment_id),
+                {"task_id": task_id, "status": task.status.value},
+                qos=1,
+            )
+        return ok
 
     def online_clients(self) -> list[str]:
         return self._store.online_clients()

@@ -32,6 +32,23 @@ from repro.core.broker import (
 from repro.core.documents import TaskStatus
 
 TERMINAL = {TaskStatus.FINISHED, TaskStatus.ERROR, TaskStatus.CANCELED}
+_TERMINAL_VALUES = {s.value for s in TERMINAL}
+
+
+@dataclass(frozen=True)
+class TaskCounts:
+    """O(1) snapshot of an assignment's task lifecycle — maintained by
+    status *events* (the broker's status stream), never by re-scanning
+    every task. `pump_until_deadline` closes rounds on these."""
+
+    finished: int = 0
+    error: int = 0
+    canceled: int = 0
+    active: int = 0
+
+    @property
+    def terminal(self) -> int:
+        return self.finished + self.error + self.canceled
 
 
 @dataclass
@@ -80,6 +97,13 @@ class AssignmentDoc:
     assignment_id: str | None = None
     _results_sub: Any = field(default=None, repr=False)
     _status_sub: Any = field(default=None, repr=False)
+    #: task_id -> terminal status value, folded in from status events; the
+    #: dict makes the fold idempotent under QoS-1 redeliveries
+    _terminal: dict = field(default_factory=dict, repr=False)
+    _n_finished: int = field(default=0, repr=False)
+    _n_error: int = field(default=0, repr=False)
+    _n_canceled: int = field(default=0, repr=False)
+    _task_ids: set = field(default_factory=set, repr=False)
 
     # ------------------------------------------------------------------ #
     def commit(self) -> "AssignmentDoc":
@@ -103,15 +127,27 @@ class AssignmentDoc:
         ]
         # Pre-subscribe with a wildcard: the assignment id is not known
         # until creation, but subscribing before task visibility matters
-        # more; we filter by assignment afterwards.
-        results_sub = self.user.broker.subscribe("assignments/*/results", qos=1)
-        status_sub = self.user.broker.subscribe("assignments/*/status", qos=1)
+        # more; we filter by assignment afterwards. The subscriptions are
+        # `reliable` — the user's AMQP queue sits next to the server, so
+        # the vehicle-link delay faults don't apply (duplicates still do:
+        # the terminal fold below is idempotent per task).
+        results_sub = self.user.broker.subscribe(
+            "assignments/*/results", qos=1, reliable=True
+        )
+        status_sub = self.user.broker.subscribe(
+            "assignments/*/status", qos=1, reliable=True
+        )
         assignment = self.user.server.create_assignment(self.name, specs)
         self.assignment_id = assignment.assignment_id
         for t, task_id in zip(self.tasks, assignment.task_ids):
             t.task_id = task_id
         self._results_sub = results_sub
         self._status_sub = status_sub
+        self._task_ids = {t.task_id for t in self.tasks}
+        # every FINISHED/ERROR/CANCELED transition lands here the moment
+        # the server publishes it — counts() never rebuilds statuses
+        status_sub.wake = self._absorb_status_events
+        self._absorb_status_events()
         return self
 
     # ------------------------------------------------------------------ #
@@ -131,12 +167,55 @@ class AssignmentDoc:
                 yield msg.value
 
     def statuses(self) -> dict[str, str]:
-        """Current task statuses, on demand (stateless server read)."""
+        """Current task statuses via a bulk server re-scan — O(n_tasks)
+        per call. Deprecated on hot paths (the parity oracles and tests
+        keep using it); drivers close rounds on `counts()` instead."""
         out = {}
         for t in self.tasks:
             assert t.task_id is not None
             out[t.task_id] = self.user.server.task(t.task_id).status.value
         return out
+
+    # -- event-maintained lifecycle counters --------------------------- #
+    def _absorb_status_events(self) -> None:
+        """Fold pending status messages into the per-task terminal dict.
+        Runs from the subscription's `wake` hook, i.e. synchronously with
+        the store transition (reliable sub), so the counters never lag the
+        server truth. Idempotent: duplicates and foreign assignments'
+        wildcard-matched messages are discarded."""
+        sub = self._status_sub
+        if sub is None:
+            return
+        topic = self._my_topic("status")
+        for msg in sub.drain():
+            if msg.topic != topic:
+                continue
+            v = msg.value
+            tid, status = v["task_id"], v["status"]
+            if tid not in self._task_ids or tid in self._terminal:
+                continue
+            if status not in _TERMINAL_VALUES:
+                continue
+            self._terminal[tid] = status
+            if status == TaskStatus.FINISHED.value:
+                self._n_finished += 1
+            elif status == TaskStatus.ERROR.value:
+                self._n_error += 1
+            else:
+                self._n_canceled += 1
+
+    def counts(self) -> TaskCounts:
+        """O(1) lifecycle counters (finished/error/canceled/active),
+        maintained by status events — the hot-path replacement for
+        `statuses()` scans in `pump_until_deadline`/`await_results`."""
+        assert self.assignment_id is not None, "commit() first"
+        done = self._n_finished + self._n_error + self._n_canceled
+        return TaskCounts(
+            finished=self._n_finished,
+            error=self._n_error,
+            canceled=self._n_canceled,
+            active=len(self.tasks) - done,
+        )
 
     def await_results(
         self,
@@ -150,8 +229,7 @@ class AssignmentDoc:
         would block on the AMQP queue instead."""
         assert self.assignment_id is not None, "commit() first"
         for _ in range(max_pumps):
-            statuses = self.statuses()
-            if all(s != TaskStatus.ACTIVE.value for s in statuses.values()):
+            if self.counts().active == 0:
                 return self.results()
             pump()
         raise TimeoutError("assignment did not finish")

@@ -6,6 +6,13 @@ from repro.fleet.analytics import (
     merge_moments_reference,
 )
 from repro.fleet.churn import DenseChurn, EventChurn, geometric_gap, make_churn
+from repro.fleet.engine import (
+    PHASE_CHURN,
+    PHASE_SERVICE,
+    PHASE_TIMER,
+    EngineService,
+    EventEngine,
+)
 from repro.fleet.compression import (
     ErrorFeedback,
     batched_dequant_mean,
@@ -28,16 +35,27 @@ from repro.fleet.service import (
     FleetServiceScheduler,
     make_service,
 )
-from repro.fleet.simulator import FleetSimulator, SimConfig
+from repro.fleet.simulator import (
+    Backends,
+    ChurnBackend,
+    EngineBackend,
+    FleetSimulator,
+    PlaneBackend,
+    ServiceBackend,
+    SimConfig,
+)
 
 __all__ = [
-    "AnalyticsConfig", "AnalyticsDriver", "DenseChurn", "DensePollService",
-    "ErrorFeedback", "EventChurn", "FedConfig", "FederatedDriver",
-    "FleetMetrics", "FleetPool", "FleetServiceScheduler", "FleetSimulator",
-    "PLANES", "RoundMetrics", "SCENARIOS", "SIGNALS", "Scenario",
-    "ShardedSignalPlane", "SimConfig", "WindowStats", "aggregate_deltas",
-    "aggregate_packed", "aggregate_reference", "batched_dequant_mean",
-    "build_plane", "client_delta", "geometric_gap", "local_sgd",
-    "make_churn", "make_codec", "make_service", "mean_reported_loss",
+    "AnalyticsConfig", "AnalyticsDriver", "Backends", "ChurnBackend",
+    "DenseChurn", "DensePollService", "EngineBackend", "EngineService",
+    "ErrorFeedback", "EventChurn", "EventEngine", "FedConfig",
+    "FederatedDriver", "FleetMetrics", "FleetPool", "FleetServiceScheduler",
+    "FleetSimulator", "PHASE_CHURN", "PHASE_SERVICE", "PHASE_TIMER",
+    "PLANES", "PlaneBackend", "RoundMetrics", "SCENARIOS", "SIGNALS",
+    "Scenario", "ServiceBackend", "ShardedSignalPlane", "SimConfig",
+    "WindowStats", "aggregate_deltas", "aggregate_packed",
+    "aggregate_reference", "batched_dequant_mean", "build_plane",
+    "client_delta", "geometric_gap", "local_sgd", "make_churn",
+    "make_codec", "make_service", "mean_reported_loss",
     "merge_moments_reference", "pump_until_deadline", "stack_deltas",
 ]

@@ -123,9 +123,21 @@ class AnalyticsDriver:
     """Runs windowed streaming-statistics assignments through the platform
     (the analytics sibling of `FederatedDriver`)."""
 
-    def __init__(self, user: User, cfg: AnalyticsConfig):
+    def __init__(
+        self,
+        user: User,
+        cfg: AnalyticsConfig,
+        *,
+        engine: Any = None,
+        status_oracle: bool = False,
+    ):
         self.user = user
         self.cfg = cfg
+        #: unified event engine: window deadlines become heap entries; the
+        #: quorum check reads AssignmentDoc.counts() (status events), with
+        #: status_oracle=True restoring the dense statuses() scan
+        self.engine = engine
+        self.status_oracle = status_oracle
         self.history: list[WindowStats] = []
         #: raw per-vehicle sketches of the most recent window (tests replay
         #: the batched merge against the sequential reference with these)
@@ -160,6 +172,8 @@ class AnalyticsDriver:
             need=need,
             budget=cfg.deadline_pumps,
             pump=pump,
+            engine=self.engine,
+            status_oracle=self.status_oracle,
         )
         canceled = assign.cancel()
         sketches = []

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import heapq
 import math
+from functools import partial
 
 import numpy as np
 
@@ -64,6 +65,35 @@ class EventChurn:
         self._next: dict[str, int | None] = {}
         self._heap: list[tuple[int, int, str]] = []
         self.now = 0
+        #: when attached, toggle events live in the unified engine heap
+        #: (repro.fleet.engine) instead of the private one
+        self._engine = None
+        self._toggle = None
+
+    # -- unified-engine sink --------------------------------------------- #
+    def attach_engine(self, engine, toggle) -> None:
+        """Route future (and any already-pending) toggle events into the
+        unified `EventEngine` heap. `toggle(cid)` performs the power
+        transition; `pop_due` is never called in this mode — the engine's
+        drain fires toggles in the same (tick, index) fleet order."""
+        from repro.fleet.engine import PHASE_CHURN  # cycle-free late import
+
+        self._engine = engine
+        self._toggle = toggle
+        self._phase = PHASE_CHURN
+        while self._heap:
+            t, idx, cid = heapq.heappop(self._heap)
+            if self._next.get(cid) == t:
+                engine.schedule(
+                    t, partial(self._fire, cid, t), phase=PHASE_CHURN, key=idx
+                )
+
+    def _fire(self, cid: str, t: int) -> None:
+        if self._next.get(cid) != t:
+            return  # stale: rescheduled or canceled since pushed
+        self.now = max(self.now, t)
+        self._next[cid] = None
+        self._toggle(cid)  # re-enters via notify to draw the next gap
 
     # -- membership ------------------------------------------------------ #
     def watch(self, cid: str, index: int, online: bool, now: int | None = None) -> None:
@@ -95,13 +125,22 @@ class EventChurn:
     _use_heap = True
 
     def _schedule(self, cid: str) -> None:
+        if self._engine is not None:
+            # external transitions between ticks draw from the engine's
+            # clock (the legacy path refreshed `now` in every pop_due)
+            self.now = max(self.now, self._engine.now)
         p = self.p_leave if self._online[cid] else self.p_return
         if p <= 0.0:
             self._next[cid] = None  # pending heap entries become stale
             return
         t = self.now + geometric_gap(float(self._rng[cid].random()), p)
         self._next[cid] = t
-        if self._use_heap:
+        if self._engine is not None:
+            self._engine.schedule(
+                t, partial(self._fire, cid, t), phase=self._phase,
+                key=self._index[cid],
+            )
+        elif self._use_heap:
             heapq.heappush(self._heap, (t, self._index[cid], cid))
 
     def pop_due(self, now: int) -> list[str]:

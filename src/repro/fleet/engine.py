@@ -1,0 +1,324 @@
+"""The unified fleet event engine (ROADMAP item 1).
+
+One time-ordered heap drives everything the simulator used to poll for:
+
+* **ignition toggles** — `repro.fleet.churn.EventChurn` pushes its seeded
+  geometric toggle events straight into the engine (phase CHURN);
+* **service wakes and straggler/resync releases** — `EngineService`
+  (below) models per-client service rates as token-bucket refill events:
+  an idle client's periodic dial-in is a refill at its next resync phase
+  tick, and a gated straggler's budget refills at its next ungated slot
+  (phase SERVICE). Broker-delivery wakes stay O(1) bit flips on a hot
+  queue — no heap traffic from other threads;
+* **round/analytics deadline closes** — `pump_until_deadline` registers
+  the round deadline as a timer entry (phase TIMER) and closes on it.
+
+`FleetSimulator.tick` drains the heap once per tick in O(events due):
+a mostly-idle million-vehicle tick pops a handful of entries instead of
+scanning the fleet. Same-tick ordering is made deterministic by the
+phase number — churn toggles apply before service events, which apply
+before timers — reproducing the legacy tick's phase order exactly, and
+heap ties beyond (at, phase, key) break by schedule order.
+
+Parity contract (the house rule): the dense per-tick poll survives as
+the oracle — `SimConfig(backends=Backends(engine="dense", service=
+"dense", churn="dense"))` runs the original O(N) loops, and the engine
+must reproduce its aggregates, broker counters, and churn sequences
+bit-for-bit at the same seed. `tests/test_engine.py` proves it across a
+faults × churn × stragglers grid.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+from collections import deque
+from functools import partial
+from typing import TYPE_CHECKING, Callable, Iterable
+
+from repro.fleet.service import FleetServiceScheduler
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.broker import Broker, Message, Subscription
+    from repro.core.client import EdgeClient
+    from repro.fleet.elastic import FleetPool
+
+#: same-tick phase order — the legacy tick applied churn toggles first,
+#: then serviced clients; timers (round deadlines) observe both
+PHASE_CHURN, PHASE_SERVICE, PHASE_TIMER = 0, 1, 2
+
+
+class Entry:
+    """One scheduled event. `cancel()` is O(1) — the heap entry goes
+    stale and is skipped on pop; `fired` flips when the drain ran it."""
+
+    __slots__ = ("at", "phase", "key", "fn", "fired", "canceled")
+
+    def __init__(self, at: int, phase: int, key: int, fn):
+        self.at = at
+        self.phase = phase
+        self.key = key
+        self.fn = fn
+        self.fired = False
+        self.canceled = False
+
+    def cancel(self) -> None:
+        self.canceled = True
+
+
+class EventEngine:
+    """A single time-ordered event heap for the whole fleet world.
+
+    API (the registration surface the subsystems share):
+
+    * ``schedule(at, fn)`` — run ``fn`` when the drain reaches tick
+      ``at``; returns the `Entry` (cancelable, `fired`-observable).
+    * ``wake(cid)`` — nudge a client's service wake hook by id (the same
+      hook broker deliveries fire); O(1), callable from any thread.
+    * ``on_status(topic, cb)`` — reliable subscription whose messages are
+      dispatched to ``cb`` the moment they land (via `Subscription.wake`),
+      not polled.
+
+    Determinism: entries pop in ``(at, phase, key, schedule order)``
+    order. All heap mutation happens on the simulator thread; cross-
+    thread interaction goes through `wake`, which only touches GIL-atomic
+    structures.
+    """
+
+    def __init__(self, broker: "Broker | None" = None):
+        self._broker = broker
+        self._heap: list[tuple[int, int, int, int, Entry]] = []
+        self._seq = itertools.count()
+        self._wakes: dict[str, Callable[[], None]] = {}
+        #: last drained tick; during a drain, the tick being drained
+        self.now = 0
+        #: True while `drain` runs — same-tick schedules are legal then
+        self.draining = False
+
+    # -- registration --------------------------------------------------- #
+    def schedule(
+        self,
+        at: int,
+        fn: Callable[[], None] | None = None,
+        *,
+        phase: int = PHASE_TIMER,
+        key: int = 0,
+    ) -> Entry:
+        entry = Entry(int(at), phase, key, fn)
+        heapq.heappush(self._heap, (entry.at, phase, key, next(self._seq), entry))
+        return entry
+
+    def bind_wake(self, cid: str, fn: Callable[[], None]) -> None:
+        self._wakes[cid] = fn
+
+    def unbind_wake(self, cid: str) -> None:
+        self._wakes.pop(cid, None)
+
+    def wake(self, cid: str) -> bool:
+        """Fire a client's wake hook by id (True if one is bound)."""
+        fn = self._wakes.get(cid)
+        if fn is None:
+            return False
+        fn()
+        return True
+
+    def on_status(
+        self, topic: str, cb: Callable[["Message"], None]
+    ) -> "Subscription":
+        """Dispatch every message on `topic` to `cb` as it is delivered.
+
+        The subscription is reliable (user-side AMQP leg: no delay
+        faults), so `cb` observes transitions synchronously with the
+        store commit. Returns the subscription for unsubscribe."""
+        if self._broker is None:
+            raise RuntimeError("EventEngine has no broker attached")
+        sub = self._broker.subscribe(topic, qos=1, reliable=True)
+
+        def pump() -> None:
+            for msg in sub.drain():
+                cb(msg)
+
+        sub.wake = pump
+        return sub
+
+    # -- the per-tick sweep --------------------------------------------- #
+    def drain(self, t: int) -> int:
+        """Run every entry due at or before tick `t`, in deterministic
+        (at, phase, key, schedule-order) order. Callbacks may schedule
+        same-tick entries (e.g. a churn power-on queueing a service
+        refill at `t`); the heap ordering runs them in phase order within
+        this same drain. Returns the number of entries fired."""
+        self.now = t
+        self.draining = True
+        fired = 0
+        heap = self._heap
+        try:
+            while heap and heap[0][0] <= t:
+                entry = heapq.heappop(heap)[4]
+                if entry.canceled:
+                    continue
+                entry.fired = True
+                if entry.fn is not None:
+                    entry.fn()
+                fired += 1
+        finally:
+            self.draining = False
+        return fired
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+class EngineService(FleetServiceScheduler):
+    """Engine-native fleet service: the scheduler's sweep without the
+    per-tick O(N) numpy masks.
+
+    Where `FleetServiceScheduler` recomputes straggler/resync phase masks
+    over the whole fleet every tick, this service keeps each client's
+    *next* service credit in the engine heap — a token-bucket view of the
+    same phase arithmetic:
+
+    * every online client holds a **resync refill** event at its next
+      ``(t + index) % resync_period == 0`` tick, rescheduled one period
+      ahead each time it fires (stale-checked across power cycles);
+    * a straggler that gets woken while gated books a **straggler
+      release** event at its next ungated slot — its service budget
+      refilling — instead of being re-examined every tick;
+    * broker/container wakes append the index to a `deque` (GIL-atomic,
+      any thread) and flip the runnable bit; the next tick folds the hot
+      queue into the sweep.
+
+    The sweep itself — order, gating, clear-then-set runnable discipline,
+    post-advance re-arm — is the scheduler's own `_sweep`, so the parity
+    argument is inherited rather than re-proven: a tick services exactly
+    the indices the dense loop would touch for a broker-visible action,
+    in the same ascending order.
+    """
+
+    def __init__(
+        self,
+        engine: EventEngine,
+        pool: "FleetPool",
+        *,
+        steps_per_tick: int,
+        resync_period: int,
+        straggler_period: int,
+        straggler_indices: Iterable[int] = (),
+    ):
+        self._engine = engine
+        self._hot: deque[int] = deque()
+        self._due: list[int] = []
+        self._resync_at: dict[int, int] = {}
+        self._release_at: dict[int, int] = {}
+        super().__init__(
+            pool,
+            steps_per_tick=steps_per_tick,
+            resync_period=resync_period,
+            straggler_period=straggler_period,
+            straggler_indices=straggler_indices,
+        )
+
+    # -- wake plumbing --------------------------------------------------- #
+    def _make_wake(self, i: int):
+        def wake() -> None:
+            live = self._live
+            if (
+                live is not None
+                and threading.current_thread() is self._sweep_thread
+            ):
+                if i == self._cursor:
+                    # self-wake of the client being serviced: the sweep's
+                    # post-advance has_work check decides runnability
+                    return
+                if not self._runnable[i]:
+                    self._runnable[i] = True
+                    self._hot.append(i)
+                if i > self._cursor:
+                    heapq.heappush(live, i)
+                return
+            # outside a sweep / from another thread: flip the bit and note
+            # the index on the hot queue — there is no per-tick mask to
+            # pick a lone bit up, so the flip must leave a trace
+            if not self._runnable[i]:
+                self._runnable[i] = True
+                self._hot.append(i)
+
+        return wake
+
+    def _note_runnable(self, i: int) -> None:
+        # post-advance re-arm: still has work => service again next tick
+        self._runnable[i] = True
+        self._hot.append(i)
+
+    # -- token-bucket refill events -------------------------------------- #
+    def _schedule_resync(self, i: int) -> None:
+        eng = self._engine
+        # earliest serviceable tick: the tick being drained if we are
+        # inside a drain (a churn power-on), else the next one
+        t0 = eng.now + (0 if eng.draining else 1)
+        at = t0 + (-(t0 + i)) % self.resync_period
+        self._resync_at[i] = at
+        eng.schedule(
+            at, partial(self._fire_resync, i, at), phase=PHASE_SERVICE, key=i
+        )
+
+    def _fire_resync(self, i: int, at: int) -> None:
+        if self._resync_at.get(i) != at:
+            return  # stale: the client power-cycled since this was booked
+        nxt = at + self.resync_period
+        self._resync_at[i] = nxt
+        self._engine.schedule(
+            nxt, partial(self._fire_resync, i, nxt), phase=PHASE_SERVICE, key=i
+        )
+        self._due.append(i)
+
+    def _on_gated_skip(self, i: int, t: int) -> None:
+        # a straggler woke while gated: book its budget refill at the next
+        # ungated slot instead of re-checking the gate every tick
+        if not self._runnable[i] or i in self._release_at:
+            return
+        at = t + (-(t + i)) % self.straggler_period
+        self._release_at[i] = at
+        self._engine.schedule(
+            at, partial(self._fire_release, i, at), phase=PHASE_SERVICE, key=i
+        )
+
+    def _fire_release(self, i: int, at: int) -> None:
+        if self._release_at.get(i) != at:
+            return
+        del self._release_at[i]
+        if self._runnable[i] and self._clients[i] is not None:
+            self._due.append(i)
+
+    # -- pool membership hooks -------------------------------------------- #
+    def client_powered_on(self, index: int, client: "EdgeClient") -> None:
+        super().client_powered_on(index, client)
+        if self._runnable[index]:
+            self._hot.append(index)
+        self._engine.bind_wake(client.client_id, self._make_wake(index))
+        self._schedule_resync(index)
+
+    def client_powered_off(self, index: int) -> None:
+        if index < self._capacity:
+            c = self._clients[index]
+            if c is not None:
+                self._engine.unbind_wake(c.client_id)
+        super().client_powered_off(index)
+        # pending refill events go stale rather than being heap-deleted
+        self._resync_at.pop(index, None)
+        self._release_at.pop(index, None)
+
+    # -- the per-tick service step ---------------------------------------- #
+    def tick(self, t: int) -> None:
+        """Service exactly the clients with a due event this tick: refill
+        events collected by the engine drain plus hot-queue wakes — no
+        fleet-wide mask, O(due + runnable)."""
+        live = self._due
+        self._due = []
+        hot = self._hot
+        while hot:
+            i = hot.popleft()
+            if self._runnable[i] and self._clients[i] is not None:
+                live.append(i)
+        heapq.heapify(live)
+        self._sweep(live, t)

@@ -40,26 +40,60 @@ def pump_until_deadline(
     need: int,
     budget: int | None,
     pump: Callable[[], None],
+    engine: Any = None,
+    status_oracle: bool = False,
 ) -> int:
     """Pump the world until `need` tasks are FINISHED, every task is
-    terminal, or the pump `budget` expires (the paper's wall-clock round
+    terminal, or the deadline passes (the paper's wall-clock round
     deadline: close on time with whatever arrived). Returns pumps used.
-    Raises TimeoutError only for unbounded waits that never quiesce."""
+    Raises TimeoutError only for unbounded waits that never quiesce.
+
+    The quorum check reads `AssignmentDoc.counts()` — O(1) counters
+    maintained by status events — never a per-pump `statuses()` rebuild.
+    With an `engine`, the deadline itself is a heap entry: the round
+    closes when the timer fires (identical to the pump budget whenever
+    one pump == one tick, i.e. every driver in this repo).
+    `status_oracle=True` restores the dense per-pump statuses() scan —
+    the parity oracle the engine path is tested against bit-for-bit."""
     hard = budget if budget is not None else 100_000
+    if status_oracle:
+        pumps = 0
+        for pumps in range(1, hard + 1):
+            pump()
+            statuses = assign.statuses()
+            done = sum(
+                s == TaskStatus.FINISHED.value for s in statuses.values()
+            )
+            dead = sum(
+                s in (TaskStatus.ERROR.value, TaskStatus.CANCELED.value)
+                for s in statuses.values()
+            )
+            if done >= need or done + dead == n_tasks:
+                return pumps
+        if budget is None:  # pragma: no cover
+            raise TimeoutError("assignment did not reach its deadline quorum")
+        return pumps
+    deadline = None
+    if engine is not None and budget is not None:
+        deadline = engine.schedule(engine.now + budget)
     pumps = 0
-    for pumps in range(1, hard + 1):
+    while True:
+        pumps += 1
         pump()
-        statuses = assign.statuses()
-        done = sum(s == TaskStatus.FINISHED.value for s in statuses.values())
-        dead = sum(
-            s in (TaskStatus.ERROR.value, TaskStatus.CANCELED.value)
-            for s in statuses.values()
-        )
-        if done >= need or done + dead == n_tasks:
+        c = assign.counts()
+        if c.finished >= need or c.active == 0:
+            if deadline is not None:
+                deadline.cancel()
             return pumps
-    if budget is None:  # pragma: no cover
-        raise TimeoutError("assignment did not reach its deadline quorum")
-    return pumps
+        if deadline is not None:
+            if deadline.fired:
+                return pumps
+        elif pumps >= hard:
+            if budget is None:  # pragma: no cover
+                raise TimeoutError(
+                    "assignment did not reach its deadline quorum"
+                )
+            return pumps
 
 
 # --------------------------------------------------------------------- #
@@ -214,9 +248,15 @@ class FederatedDriver:
         n_samples: int = 64,
         n_samples_fn: Callable[[int], int] | None = None,
         payload_source: str | None = None,
+        engine: Any = None,
+        status_oracle: bool = False,
     ):
         self.user = user
         self.cfg = cfg
+        #: unified event engine: round deadlines become heap entries
+        self.engine = engine
+        #: True = close rounds on dense statuses() scans (parity oracle)
+        self.status_oracle = status_oracle
         #: task container source; override to exercise bespoke uploads
         self.payload_source = payload_source or ROUND_PAYLOAD
         self.w = np.zeros((dim,), np.float32)
@@ -260,6 +300,8 @@ class FederatedDriver:
             need=need,
             budget=self.cfg.deadline_pumps,
             pump=pump,
+            engine=self.engine,
+            status_oracle=self.status_oracle,
         )
         # deadline reached: cancel stragglers (paper lifecycle semantics)
         canceled = assign.cancel()

@@ -220,6 +220,24 @@ class FleetServiceScheduler:
         gated = self._straggler & (((t + idx) % self.straggler_period) != 0)
         cand = self._online & ~gated & (self._runnable | phase)
         live = [int(i) for i in np.flatnonzero(cand)]  # ascending => a heap
+        self._sweep(live, t)
+
+    # hooks the engine-native subclass overrides (repro.fleet.engine):
+    # the sweep below is the parity-critical loop both services share
+    def _on_gated_skip(self, i: int, t: int) -> None:
+        """A gated straggler surfaced mid-sweep; the mask recomputation
+        next tick re-examines it, so the base scheduler needs no note."""
+
+    def _note_runnable(self, i: int) -> None:
+        """Post-advance re-arm: the client still has work."""
+        self._runnable[i] = True
+
+    def _sweep(self, live: list[int], t: int) -> None:
+        """Service `live` (a heap of candidate indices) in ascending
+        order — the dense loop's order. Shared verbatim by the scheduler
+        and `EngineService`, so the bit-for-bit parity argument holds for
+        both: gating, the clear-then-set runnable discipline, and the
+        post-advance re-arm are identical."""
         self._live = live
         self._cursor = -1
         self._sweep_thread = threading.current_thread()
@@ -234,6 +252,7 @@ class FleetServiceScheduler:
                 if c is None:
                     continue
                 if self._straggler[i] and (t + i) % self.straggler_period:
+                    self._on_gated_skip(i, t)
                     continue  # gated straggler woken mid-sweep: next slot
                 # clear-then-set, never assign after advance: a cross-thread
                 # wake landing between `c.has_work` and the store must not
@@ -243,7 +262,7 @@ class FleetServiceScheduler:
                     c.resync()
                 c.advance(self.steps_per_tick)
                 if c.has_work:
-                    self._runnable[i] = True
+                    self._note_runnable(i)
                 served += 1
         finally:
             self._live = None

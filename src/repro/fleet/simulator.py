@@ -14,22 +14,30 @@ Drives hundreds-to-thousands of `EdgeClient` instances against one
 
 Time is an integer tick. One `tick()`:
 
-1. applies the churn toggles *due* this tick — seeded geometric
-   inter-arrival event times per vehicle (`repro.fleet.churn`), popped
-   from a heap in O(events), not one RNG draw per vehicle per tick;
+1. drains the unified event engine (`repro.fleet.engine.EventEngine`,
+   the default): churn toggles, token-bucket service refills, straggler
+   releases, and round-deadline timers all pop off ONE time-ordered
+   heap in O(events due) — phase ordering (churn < service < timer)
+   reproduces the legacy subsystem order exactly;
 2. advances the broker clock, releasing delayed messages (`Broker.advance`);
 3. advances the fleet's signals — ONE columnar `FleetSignalPlane` step
    (a jit'd drive-cycle scenario from `repro.fleet.scenarios`) instead of
    the old O(n_clients × n_signals) per-vehicle iterator loop;
-4. services the fleet's sync loops through the configured fleet service
-   (`repro.fleet.service`): the event-driven `FleetServiceScheduler` by
-   default — wake hooks make clients runnable, vectorized phase masks
-   gate stragglers/resyncs, and only runnable clients are touched — or
-   the original `DensePollService` O(N) loop (`SimConfig.service =
-   "dense"`), kept as the bit-for-bit parity oracle. Stragglers get a
+4. services the fleet's sync loops: `EngineService` under the engine
+   (heap-fed refills + wakes, only due/woken clients touched), the
+   numpy-masked `FleetServiceScheduler`, or the original
+   `DensePollService` O(N) loop. With `Backends(engine="dense")` the
+   legacy per-subsystem tick (churn scan, then service sweep) runs
+   instead — kept as the bit-for-bit parity oracle. Stragglers get a
    sync-loop budget only every `straggler_period`-th tick; idle clients
    periodically dial in (`resync`) — the paper's recovery story for
    dropped QoS-0 notifications.
+
+Backend selection is typed: `SimConfig.backends` is a `Backends`
+sub-config of enum members (`PlaneBackend`, `ServiceBackend`,
+`ChurnBackend`, `EngineBackend`); strings coerce, typos raise
+`ValueError`, and the legacy `SimConfig(plane=/service=/churn=)` kwargs
+still work as overrides.
 
 Everything observable is a deterministic function of `SimConfig`
 (including the seed): same config => same event interleaving => same
@@ -39,8 +47,10 @@ converges to the *exact* fault-free aggregate).
 """
 from __future__ import annotations
 
+import dataclasses
+import enum
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable
 
 import numpy as np
@@ -51,11 +61,93 @@ from repro.core.user import User
 from repro.fleet.analytics import AnalyticsConfig, AnalyticsDriver
 from repro.fleet.churn import make_churn
 from repro.fleet.elastic import FleetPool
+from repro.fleet.engine import EngineService, EventEngine
 from repro.fleet.federated import FedConfig
 from repro.fleet.metrics import FleetMetrics, RoundMetrics
 from repro.fleet.rounds import FederatedDriver
 from repro.fleet.scenarios import build_plane
 from repro.fleet.service import make_service
+
+
+# --------------------------------------------------------------------- #
+# typed backend selection (the Backends sub-config)                      #
+# --------------------------------------------------------------------- #
+class PlaneBackend(str, enum.Enum):
+    """Signal-plane implementation: one columnar host array, or rows
+    sharded across devices on a `clients` mesh — bit-for-bit identical."""
+
+    HOST = "host"
+    SHARDED = "sharded"
+
+
+class ServiceBackend(str, enum.Enum):
+    """Fleet sync-loop service: the event-driven scheduler (O(runnable)
+    per tick; engine-native when the engine backend is "event") or the
+    original dense O(N) poll loop, kept as the parity oracle."""
+
+    SCHEDULER = "scheduler"
+    DENSE = "dense"
+
+
+class ChurnBackend(str, enum.Enum):
+    """Ignition churn: seeded geometric inter-arrival *events* (O(events)
+    per tick) or the O(N)-scan oracle over the same per-vehicle streams."""
+
+    EVENT = "event"
+    DENSE = "dense"
+
+
+class EngineBackend(str, enum.Enum):
+    """Tick orchestration: "event" drains one unified time-ordered heap
+    (churn toggles, service refills, round deadlines — O(events) per
+    tick); "dense" is the legacy per-subsystem tick, the parity oracle."""
+
+    EVENT = "event"
+    DENSE = "dense"
+
+
+def _coerce_backend(enum_cls: type, value, knob: str):
+    if isinstance(value, enum_cls):
+        return value
+    try:
+        return enum_cls(value)
+    except ValueError:
+        valid = ", ".join(repr(e.value) for e in enum_cls)
+        raise ValueError(
+            f"unknown {knob} backend {value!r}; valid choices: {valid}"
+        ) from None
+
+
+@dataclass(frozen=True)
+class Backends:
+    """Which implementation runs each simulator subsystem.
+
+    Every knob is a typed enum; plain strings are accepted and coerced
+    (``Backends(plane="sharded")``), and a typo raises a ValueError
+    naming the valid choices. Each "dense" choice is the corresponding
+    O(N) parity oracle — any mix must yield bit-for-bit identical runs.
+    """
+
+    plane: PlaneBackend = PlaneBackend.HOST
+    service: ServiceBackend = ServiceBackend.SCHEDULER
+    churn: ChurnBackend = ChurnBackend.EVENT
+    engine: EngineBackend = EngineBackend.EVENT
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "plane", _coerce_backend(PlaneBackend, self.plane, "plane")
+        )
+        object.__setattr__(
+            self, "service",
+            _coerce_backend(ServiceBackend, self.service, "service"),
+        )
+        object.__setattr__(
+            self, "churn", _coerce_backend(ChurnBackend, self.churn, "churn")
+        )
+        object.__setattr__(
+            self, "engine",
+            _coerce_backend(EngineBackend, self.engine, "engine"),
+        )
 
 
 @dataclass(frozen=True)
@@ -72,10 +164,6 @@ class SimConfig:
     scenario: str = "road-grade"
     #: plane history ring depth (backs `autospada.get_signal_window`)
     signal_history: int = 256
-    #: signal-plane implementation: "host" (one columnar host array) or
-    #: "sharded" (rows sharded across devices on a `clients` mesh — the
-    #: million-vehicle layout; bit-for-bit identical to "host")
-    plane: str = "host"
     # -- broker faults -------------------------------------------------- #
     p_drop: float = 0.0        # QoS-0 notification drop probability
     p_duplicate: float = 0.0   # QoS-1 redelivery probability
@@ -89,15 +177,36 @@ class SimConfig:
     # -- service rates -------------------------------------------------- #
     steps_per_tick: int = 8    # sync-loop op budget per client per tick
     resync_period: int = 4     # idle clients dial in every k ticks
-    #: fleet service implementation: "scheduler" (event-driven runnable
-    #: set, O(runnable) per tick) or "dense" (the original O(N) poll loop,
-    #: kept as the parity oracle — both yield identical interleavings)
-    service: str = "scheduler"
-    #: churn implementation: "event" (seeded geometric inter-arrival
-    #: times per vehicle, O(events)/tick via a heap) or "dense" (the
-    #: O(N)-scan oracle over the same per-vehicle event streams — the
-    #: parity witness, identical toggle sequences)
-    churn: str = "event"
+    # -- backend selection ---------------------------------------------- #
+    #: typed per-subsystem implementation choices. The four legacy
+    #: top-level knobs below stay accepted (strings or enums) and
+    #: override the corresponding `backends` field; after construction
+    #: they mirror the resolved enum values, so `cfg.plane == "host"`
+    #: style comparisons keep working.
+    backends: Backends | None = None
+    plane: PlaneBackend | str | None = None
+    service: ServiceBackend | str | None = None
+    churn: ChurnBackend | str | None = None
+    engine: EngineBackend | str | None = None
+
+    def __post_init__(self):
+        b = self.backends if self.backends is not None else Backends()
+        if not isinstance(b, Backends):
+            raise TypeError(
+                f"backends must be a Backends, got {type(b).__name__}"
+            )
+        overrides = {
+            knob: v
+            for knob in ("plane", "service", "churn", "engine")
+            if (v := getattr(self, knob)) is not None
+        }
+        if overrides:
+            # replace() re-runs Backends.__post_init__, coercing strings
+            # and raising the naming ValueError on typos
+            b = dataclasses.replace(b, **overrides)
+        object.__setattr__(self, "backends", b)
+        for knob in ("plane", "service", "churn", "engine"):
+            object.__setattr__(self, knob, getattr(b, knob))
 
 
 class FleetSimulator:
@@ -113,6 +222,7 @@ class FleetSimulator:
         signal_fn: Callable[[int], dict] | None = None,
     ):
         self.cfg = cfg
+        b = cfg.backends
         faults = seeded_fault_plan(
             cfg.seed,
             p_drop=cfg.p_drop,
@@ -121,6 +231,12 @@ class FleetSimulator:
         )
         self.broker = Broker(faults)
         self.store, _, (self.server,) = make_platform(broker=self.broker)
+        #: the unified event heap (None under the legacy dense tick path)
+        self.engine = (
+            EventEngine(self.broker)
+            if b.engine is EngineBackend.EVENT
+            else None
+        )
         # Signals: an explicit signal_fn keeps the legacy per-vehicle
         # scripted path; otherwise the whole fleet shares one columnar
         # signal plane seeded from the configured drive-cycle scenario.
@@ -132,7 +248,7 @@ class FleetSimulator:
                 cfg.n_clients,
                 cfg.seed,
                 history=cfg.signal_history,
-                plane=cfg.plane,
+                plane=b.plane.value,
             )
         )
         self.pool = FleetPool(
@@ -151,7 +267,13 @@ class FleetSimulator:
         # tick) instead of a per-vehicle per-tick coin; each vehicle draws
         # from its own stream so adding a fault knob — or another vehicle —
         # never perturbs who leaves when
-        self.churn = make_churn(cfg.churn, cfg.seed, cfg.p_leave, cfg.p_return)
+        self.churn = make_churn(
+            b.churn.value, cfg.seed, cfg.p_leave, cfg.p_return
+        )
+        if self.engine is not None and b.churn is ChurnBackend.EVENT:
+            # toggle events live in the unified heap; the dense-churn
+            # oracle keeps its scan and is applied before the drain
+            self.churn.attach_engine(self.engine, self._toggle_ignition)
         self.pool.attach_churn(self.churn)
         for cid, v in self.pool.vehicles.items():
             self.churn.watch(
@@ -168,35 +290,58 @@ class FleetSimulator:
         for v in self.pool.vehicles.values():
             if v.client is not None:
                 v.client.run_until_idle()
-        # fleet service: event-driven scheduler (default) or the dense
-        # poll-loop oracle — attached after the quiesce so the scheduler's
-        # runnable set starts from the fleet's true (idle) state
-        self.service = make_service(
-            cfg.service,
-            self.pool,
-            steps_per_tick=cfg.steps_per_tick,
-            resync_period=cfg.resync_period,
-            straggler_period=cfg.straggler_period,
-            straggler_indices=slow,
-        )
+        # fleet service: event-driven scheduler (default; engine-native
+        # when the engine backend is "event") or the dense poll-loop
+        # oracle — attached after the quiesce so the scheduler's runnable
+        # set starts from the fleet's true (idle) state
+        if self.engine is not None and b.service is ServiceBackend.SCHEDULER:
+            self.service = EngineService(
+                self.engine,
+                self.pool,
+                steps_per_tick=cfg.steps_per_tick,
+                resync_period=cfg.resync_period,
+                straggler_period=cfg.straggler_period,
+                straggler_indices=slow,
+            )
+        else:
+            self.service = make_service(
+                b.service.value,
+                self.pool,
+                steps_per_tick=cfg.steps_per_tick,
+                resync_period=cfg.resync_period,
+                straggler_period=cfg.straggler_period,
+                straggler_indices=slow,
+            )
         self.pool.attach_service(self.service)
 
     # ------------------------------------------------------------------ #
     # the discrete-event loop                                            #
     # ------------------------------------------------------------------ #
+    def _toggle_ignition(self, cid: str) -> None:
+        """One churn-driven power transition; `notify` re-enters the
+        schedule via `FleetPool.attach_churn` to draw the next gap."""
+        if self.pool.vehicles[cid].client is not None:
+            self.pool.power_off(cid)
+        else:
+            self.pool.power_on(cid)
+
     def tick(self) -> None:
         """One world step. Deterministic given the config."""
         self.t += 1
         cfg = self.cfg
-        # 1. churn: pop the ignition toggles due this tick (fleet order) —
-        #    O(events), not O(N); the power transition re-enters the
-        #    schedule via `FleetPool.attach_churn` to draw the next gap
-        if cfg.p_leave or cfg.p_return:
+        # 1. due events: one drain of the unified heap fires this tick's
+        #    ignition toggles, service refills, and deadline timers in
+        #    (tick, phase, index) order — O(events), never O(N). The
+        #    legacy path (engine="dense") pops each subsystem separately;
+        #    the dense-churn oracle keeps its scan in either mode.
+        if self.engine is not None:
+            if self.churn._engine is None and (cfg.p_leave or cfg.p_return):
+                for cid in self.churn.pop_due(self.t):
+                    self._toggle_ignition(cid)
+            self.engine.drain(self.t)
+        elif cfg.p_leave or cfg.p_return:
             for cid in self.churn.pop_due(self.t):
-                if self.pool.vehicles[cid].client is not None:
-                    self.pool.power_off(cid)
-                else:
-                    self.pool.power_on(cid)
+                self._toggle_ignition(cid)
         # 2. release delayed broker deliveries due at this tick
         self.broker.advance(1)
         # 3. advance the whole fleet's signals: ONE columnar plane step
@@ -231,7 +376,13 @@ class FleetSimulator:
         if w_true is None:
             w_true = np.sin(np.linspace(0.0, 3.0, dim)).astype(np.float32)
         driver = FederatedDriver(
-            self.user, fed, dim=dim, w_true=w_true, n_samples=n_samples
+            self.user,
+            fed,
+            dim=dim,
+            w_true=w_true,
+            n_samples=n_samples,
+            engine=self.engine,
+            status_oracle=self.engine is None,
         )
         for rnd in range(rounds):
             online = len(self.pool.online())
@@ -276,7 +427,12 @@ class FleetSimulator:
         the signal plane's history ring has data to window over."""
         for _ in range(warmup_ticks):
             self.tick()
-        driver = AnalyticsDriver(self.user, cfg)
+        driver = AnalyticsDriver(
+            self.user,
+            cfg,
+            engine=self.engine,
+            status_oracle=self.engine is None,
+        )
         for w in range(windows):
             online = len(self.pool.online())
             t0, tick0 = time.perf_counter(), self.t

@@ -25,7 +25,7 @@ import numpy as np
 from repro.fleet.analytics import AnalyticsConfig
 from repro.fleet.federated import FedConfig
 from repro.fleet.scenarios import PLANES, SCENARIOS
-from repro.fleet.simulator import FleetSimulator, SimConfig
+from repro.fleet.simulator import Backends, FleetSimulator, SimConfig
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -60,6 +60,15 @@ def build_parser() -> argparse.ArgumentParser:
                     help="fleet service: event-driven scheduler "
                          "(O(runnable)/tick) or the dense poll-loop "
                          "oracle (O(N)/tick, identical interleaving)")
+    ap.add_argument("--engine", choices=("event", "dense"), default="event",
+                    help="tick orchestration: one unified time-ordered "
+                         "event heap (churn toggles, service refills, "
+                         "round deadlines — O(events)/tick) or the "
+                         "legacy per-subsystem dense tick (the "
+                         "bit-for-bit parity oracle)")
+    ap.add_argument("--churn", choices=("event", "dense"), default="event",
+                    help="churn schedule: seeded geometric event heap or "
+                         "the O(N)-scan oracle (identical toggles)")
     ap.add_argument("--deadline", type=float, default=0.9,
                     help="fraction of clients awaited per round")
     ap.add_argument("--deadline-pumps", type=int, default=64,
@@ -86,14 +95,19 @@ def main() -> None:
             n_clients=args.clients,
             seed=args.seed,
             scenario=scenario,
-            plane=args.plane,
             p_drop=args.drop,
             p_duplicate=args.duplicate,
             max_delay=args.delay,
             p_leave=args.leave,
             p_return=args.p_return,
             straggler_fraction=args.stragglers,
-            service=args.service,
+            # CLI strings coerce to the typed enums in Backends
+            backends=Backends(
+                plane=args.plane,
+                service=args.service,
+                churn=args.churn,
+                engine=args.engine,
+            ),
         )
     )
     if args.workload == "analytics":

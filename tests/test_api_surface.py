@@ -1,0 +1,102 @@
+"""`autospada.__all__` is a frozen contract (paper §5.1).
+
+Payload code may rely on exactly the names in `AUTOSPADA_API` — in every
+execution mode, in every release. This file is the drift tripwire: the
+expected tuple is duplicated here on purpose, so any edit to the contract
+has to be made twice, loudly, in the same diff.
+"""
+import io
+from contextlib import redirect_stdout
+
+from repro.core import PayloadContext, dummy_context, run_inline
+from repro.core.payload_api import AUTOSPADA_API
+
+# Deliberately NOT imported from the source module: growing or shrinking
+# the payload surface must fail here until this pin is updated too.
+EXPECTED_API = (
+    "get_signal",
+    "get_signal_window",
+    "publish",
+    "get_parameters",
+    "cache_state",
+    "load_state",
+    "clear_state",
+    "sleep",
+    "time",
+)
+
+
+def test_contract_tuple_is_pinned():
+    assert AUTOSPADA_API == EXPECTED_API
+    assert isinstance(AUTOSPADA_API, tuple)  # immutable on purpose
+    assert len(set(AUTOSPADA_API)) == len(AUTOSPADA_API)
+
+
+def test_every_contract_name_is_a_documented_method():
+    for name in AUTOSPADA_API:
+        fn = getattr(PayloadContext, name)
+        assert callable(fn), name
+        assert fn.__doc__ and fn.__doc__.strip(), f"{name} is undocumented"
+
+
+def test_no_unadvertised_public_surface():
+    """Public methods beyond the contract would be de-facto API the tuple
+    doesn't admit to. `cancel` is the one sanctioned exception: it is the
+    host-side control edge (the `docker stop` analogue), not something
+    payload code should ever call on itself."""
+    public = {
+        n for n in vars(PayloadContext)
+        if not n.startswith("_") and callable(getattr(PayloadContext, n))
+    }
+    assert public == set(AUTOSPADA_API) | {"cancel"}
+
+
+def test_dunder_all_matches_everywhere():
+    import repro.core.payload_api as mod
+
+    assert PayloadContext.__all__ == AUTOSPADA_API
+    assert "AUTOSPADA_API" in mod.__all__
+    ctx = dummy_context(seed=0)
+    assert ctx.__all__ == AUTOSPADA_API  # instances advertise it too
+
+
+def test_payloads_can_introspect_the_contract():
+    """Inside the sandbox `import autospada` binds the context object, so
+    the conventional `__all__` probe enumerates the frozen tuple."""
+    src = (
+        "import autospada\n"
+        "autospada.publish(list(autospada.__all__))\n"
+        "autospada.publish([callable(getattr(autospada, n))"
+        " for n in autospada.__all__])\n"
+    )
+    seen = []
+    ctx = PayloadContext(get_signal=lambda name: 0.0, publish=seen.append)
+    exit_ = run_inline(src, ctx)
+    assert exit_.ok, exit_.log
+    assert seen[0] == list(AUTOSPADA_API)
+    assert all(seen[1])
+
+
+def test_dummy_context_implements_the_whole_contract():
+    ctx = dummy_context(seed=7, parameters={"lr": 0.1})
+    with redirect_stdout(io.StringIO()):
+        for name in AUTOSPADA_API:
+            if name == "get_signal":
+                assert isinstance(ctx.get_signal("Vehicle.Speed"), float)
+            elif name == "get_signal_window":
+                assert len(ctx.get_signal_window("Vehicle.Speed", 4)) == 4
+            elif name == "publish":
+                ctx.publish({"ok": True})
+            elif name == "get_parameters":
+                assert ctx.get_parameters() == {"lr": 0.1}
+            elif name == "cache_state":
+                ctx.cache_state({"step": 3})
+            elif name == "load_state":
+                assert ctx.load_state() == {"step": 3}
+            elif name == "clear_state":
+                ctx.clear_state()
+                assert ctx.load_state() is None
+            elif name == "sleep":
+                ctx.sleep(0.0)
+            elif name == "time":
+                assert isinstance(ctx.time(), float)
