@@ -431,12 +431,26 @@ class EdgeClient:
                 return []
             return self.signal_handler.window(name, k)
 
+        def get_signal_sketch(name, k, bins, lo, hi, quantile_k):
+            if self.signal_handler is None:
+                return None
+            from repro.kernels.sketch import SketchSpec
+
+            return self.signal_handler.sketch(
+                name,
+                SketchSpec(
+                    window=max(1, k), bins=bins, lo=lo, hi=hi,
+                    quantile_k=quantile_k,
+                ),
+            )
+
         def publish(value: Any) -> None:
             self._emit_container_event((task_id, value, None, ""))
 
         return PayloadContext(
             get_signal=get_signal,
             get_signal_window=get_signal_window,
+            get_signal_sketch=get_signal_sketch,
             publish=publish,
             parameters=parameters,
             state_cache=self.disk.task_state,

@@ -42,6 +42,7 @@ class TaskCanceled(Exception):
 AUTOSPADA_API = (
     "get_signal",
     "get_signal_window",
+    "get_signal_sketch",
     "publish",
     "get_parameters",
     "cache_state",
@@ -87,10 +88,12 @@ class PayloadContext:
         cancel_event: threading.Event | None = None,
         clock: Callable[[], float] = time.monotonic,
         get_signal_window: Callable[[str, int], list[float]] | None = None,
+        get_signal_sketch: Callable[..., dict | None] | None = None,
         virtual_clock: bool | None = None,
     ):
         self._get_signal = get_signal
         self._get_signal_window = get_signal_window
+        self._get_signal_sketch = get_signal_sketch
         self._publish = publish
         self._parameters = parameters
         self._state_cache = state_cache if state_cache is not None else {}
@@ -127,14 +130,63 @@ class PayloadContext:
         return self._get_signal(name)
 
     def get_signal_window(self, name: str, k: int) -> list[float]:
-        """Last `k` observed values of a signal, oldest first — the input
-        to on-vehicle windowed analytics. Sources without history fall
-        back to a single latest-value sample."""
+        """Last `k` *observed* values of a signal, oldest first — the
+        input to on-vehicle windowed analytics. "Observed" means ticks
+        the vehicle was powered on: offline ticks record nothing, so
+        the list may be shorter than `k` (as may a vehicle younger than
+        `k` ticks, or a history ring smaller than `k`). Unknown signals
+        return ``[]``. Sources without history fall back to a single
+        latest-value sample; attached contexts serve the signal plane's
+        ring, synced to the host lazily on first read."""
         self._check_cancel()
         if self._get_signal_window is not None:
             return [float(v) for v in self._get_signal_window(name, k)]
         v = self._get_signal(name)
         return [] if v is None else [float(v)]
+
+    def get_signal_sketch(
+        self,
+        name: str,
+        k: int,
+        *,
+        bins: int = 16,
+        lo: float = 0.0,
+        hi: float = 12.0,
+        quantile_k: int = 32,
+    ) -> dict:
+        """Compact mergeable sketch of the last `k` observed values of a
+        signal: ``{"count", "mean", "m2", "hist", "qsk"}`` — sample
+        count, float32 Welford mean and sum of squared deviations, a
+        `bins`-bin [lo, hi) histogram (outliers clipped to the edge
+        bins), and `quantile_k` equal-weight ranked values (a KLL-style
+        quantile summary; empty when count is 0). Sketches from many
+        vehicles merge exactly (`kernels.ops.merge_moments` /
+        `merge_histograms` / `merge_quantile_sketches`), which is the
+        point: only sketch-sized results leave the vehicle, never the
+        window itself.
+
+        Exactly the observations `get_signal_window(name, k)` would
+        return are folded — offline-tick masking and short histories
+        included. Plane-attached contexts answer from one fused fleet-
+        wide device fold over the signal ring (cached per tick, the
+        ring never syncs to the host); every other source folds the
+        window through the identical float32 reference formula
+        (`kernels.sketch.sketch_reference`), so the result is
+        bit-for-bit the same either way."""
+        self._check_cancel()
+        if self._get_signal_sketch is not None:
+            sk = self._get_signal_sketch(
+                name, int(k), int(bins), float(lo), float(hi), int(quantile_k)
+            )
+            if sk is not None:
+                return sk
+        from repro.kernels.sketch import SketchSpec, sketch_reference
+
+        spec = SketchSpec(
+            window=max(1, int(k)), bins=int(bins), lo=float(lo), hi=float(hi),
+            quantile_k=int(quantile_k),
+        )
+        return sketch_reference(self.get_signal_window(name, int(k)), spec)
 
     def publish(self, value: Any) -> None:
         """Publish a JSON-serializable result to the platform. Delivery

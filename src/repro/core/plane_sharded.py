@@ -98,6 +98,10 @@ class ShardedSignalPlane(FleetSignalPlane):
         self._hist = np.asarray(self._dhist)
         self._values_dirty = False
         self._hist_dirty = False
+        self._sketch_cache: dict = {}
+        #: device->host ring transfers so far — the sketch path must
+        #: never bump it (asserted in the fleet/sketch_* benchmark)
+        self.ring_syncs = 0
 
     @property
     def devices(self) -> int:
@@ -139,11 +143,17 @@ class ShardedSignalPlane(FleetSignalPlane):
         self._init_ring_fn = jax.jit(init_ring, out_shardings=rsh)
 
         def join(hist, vals, i, slot):
-            # a joining row's ring history is NaN except the current tick
-            col = jnp.full((hist_cap, 1, vals.shape[1]), jnp.nan, jnp.float32)
-            row = jax.lax.dynamic_slice_in_dim(vals, i, 1, axis=0)
-            col = jax.lax.dynamic_update_slice_in_dim(col, row[None], slot, axis=0)
-            return jax.lax.dynamic_update_slice_in_dim(hist, col, i, axis=1)
+            # A joining row's ring history is NaN except the current
+            # tick. Written as an elementwise masked select on broadcast
+            # iotas rather than a dynamic_update_slice along the sharded
+            # client axis: GSPMD partitions iota+where shard-locally
+            # (each device rewrites only its own row shard of the
+            # donated ring), where the slice update's halo analysis can
+            # materialize more than the touched shard.
+            cli = jax.lax.broadcasted_iota(jnp.int32, (1, hist.shape[1], 1), 1)
+            slt = jax.lax.broadcasted_iota(jnp.int32, (hist_cap, 1, 1), 0)
+            col = jnp.where(slt == slot, vals[None], jnp.nan)
+            return jnp.where(cli == i, col, hist)
 
         self._join_fn = jax.jit(
             join,
@@ -170,6 +180,7 @@ class ShardedSignalPlane(FleetSignalPlane):
         if self._hist_dirty:
             self._hist = np.asarray(self._dhist)
             self._hist_dirty = False
+            self.ring_syncs += 1
 
     def _sync_mask(self) -> None:
         """Upload the offline mask at most once per tick: K ignition
@@ -211,6 +222,25 @@ class ShardedSignalPlane(FleetSignalPlane):
     def window(self, row: int, name: str, k: int) -> list[float]:
         self._sync_hist()
         return super().window(row, name, k)
+
+    def compute_sketches(self, name: str, spec, *, backend: str | None = None):
+        """Fold the *device-resident* ring shards into per-client
+        sketches: one `kernels.sketch.sketch_ring` call partitioned over
+        the client axis (jit sharding propagation on the XLA twin,
+        shard_map on the Pallas kernel). Only the `(spec.dim, capacity)`
+        sketch block crosses device->host — the ring itself never does,
+        and the lazy host mirror stays cold (`_hist_dirty` untouched)."""
+        from repro.kernels import sketch as _sk
+
+        col = self._col.get(name)
+        n = self.n_clients
+        if col is None or n == 0:
+            return _sk.empty_fleet_sketches(spec, n)
+        out = _sk.sketch_ring(
+            self._dhist, self.t, self._hist_len, col, spec,
+            backend=backend, mesh=self.mesh,
+        )
+        return _sk.sketches_from_device(spec, np.asarray(out)[:, :n])
 
     def set_online(self, row: int, online: bool) -> None:
         super().set_online(row, online)

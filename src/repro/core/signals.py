@@ -239,6 +239,9 @@ class FleetSignalPlane:
         )
         self._hist[0] = self._values
         self._hist_len = 1
+        # one fleet-wide sketch per (tick, fleet size, signal, spec) —
+        # see sketch_row
+        self._sketch_cache: dict = {}
 
     @property
     def values(self) -> np.ndarray:
@@ -352,6 +355,48 @@ class FleetSignalPlane:
         vals = self._hist[idx, row, j]
         return [float(v) for v in vals if not math.isnan(v)]
 
+    # -- fused windowed sketches ---------------------------------------- #
+    def compute_sketches(self, name: str, spec, *, backend: str | None = None):
+        """Fold every vehicle's last-`spec.window` observations of one
+        signal into compact sketches (Welford moments, fixed-bin
+        histogram, quantile summary) in a single fused device call —
+        `kernels.sketch.sketch_ring` over the whole history ring at
+        once, instead of n_clients `window()` reads + Python folds.
+
+        Each row is bit-identical to `sketch_reference` over that
+        vehicle's `window()` (offline-NaN and short-history truncation
+        included). The sharded plane overrides this to fold the
+        device-resident ring so the host mirror stays cold."""
+        import jax.numpy as jnp  # lazy: the host plane is jax-free until asked
+
+        from repro.kernels import sketch as _sk
+
+        col = self._col.get(name)
+        n = self.n_clients
+        if col is None or n == 0:
+            return _sk.empty_fleet_sketches(spec, n)
+        out = _sk.sketch_ring(
+            jnp.asarray(self._hist), self.t, self._hist_len, col, spec,
+            backend=backend,
+        )
+        return _sk.sketches_from_device(spec, np.asarray(out)[:, :n])
+
+    def sketch_row(self, row: int, name: str, spec) -> dict:
+        """One vehicle's windowed sketch, served from a fleet-wide cache:
+        the first vehicle to ask at a given (tick, fleet size) triggers
+        one `compute_sketches` call; every other vehicle's payload that
+        tick is an O(1) dict build. The key carries `t` and `n_clients`
+        so `step()`/`add_client` invalidate for free (`set_online` only
+        affects *future* ring writes, so it doesn't need to)."""
+        row = self._check_row(row)
+        key = (self.t, self.n_clients, name, spec)
+        sk = self._sketch_cache.get(key)
+        if sk is None:
+            self._sketch_cache.clear()
+            sk = self.compute_sketches(name, spec)
+            self._sketch_cache[key] = sk
+        return sk.row(row)
+
     def view(self, row: int) -> "PlaneSignalView":
         return PlaneSignalView(self, self._check_row(row))
 
@@ -440,6 +485,9 @@ class PlaneSignalView(SignalBroker):
     def read_window(self, name: str, k: int) -> list[float]:
         return self.plane.window(self.row, name, k)
 
+    def read_sketch(self, name: str, spec) -> dict:
+        return self.plane.sketch_row(self.row, name, spec)
+
 
 class SignalHandler:
     """Client component: subscribes to the broker, caches the latest value
@@ -492,6 +540,20 @@ class SignalHandler:
         self.ensure_subscribed(name)
         if self._pull and callable(getattr(self._broker, "read_window", None)):
             return self._broker.read_window(name, k)
+        return self._push_window(name, k)
+
+    def sketch(self, name: str, spec) -> dict | None:
+        """Windowed sketch for one vehicle, served by the plane's cached
+        fleet-wide device fold when the broker supports it. Returns
+        ``None`` for push sources — the payload API then folds
+        `window()` through the identical reference formula, so the
+        answer is bit-for-bit the same either way."""
+        self.ensure_subscribed(name)
+        if self._pull and callable(getattr(self._broker, "read_sketch", None)):
+            return self._broker.read_sketch(name, spec)
+        return None
+
+    def _push_window(self, name: str, k: int) -> list[float]:
         with self._lock:
             h = self._hist.get(name)
             if h is None:

@@ -19,6 +19,25 @@ split). This module is that workload on our platform:
 
 `merge_moments_reference` is the sequential pairwise (Chan et al.) merge,
 kept as the oracle the batched path is tested against.
+
+Two payload paths produce the *same sketch, bit for bit*:
+
+* `ANALYTICS_PAYLOAD` (the oracle) folds `get_signal_window` in a
+  sandboxed numpy loop — float32 Welford with the deferred-product
+  update, >=-edge histogram binning, integer-rank quantile selection
+  (`kernels.sketch.sketch_reference` is the same formula as a
+  function);
+* `SKETCH_PAYLOAD` (``AnalyticsConfig(sketch=True)``) calls
+  `autospada.get_signal_sketch`, which on plane-attached vehicles is
+  answered by ONE fused fleet-wide device fold over the signal ring
+  per tick (`compute_sketches`, cached) — N sandboxed Python folds and
+  the device→host ring sync collapse into a single kernel call.
+
+Sketches now carry a mergeable KLL-style quantile summary (`qsk`), so
+`WindowStats.quantile(q)` answers fleet-level percentile queries with a
+deterministic rank-error bound — the paper's fuel-consumption analytics
+("what's the 90th-percentile fuel rate across the fleet?") without any
+raw sample leaving a vehicle.
 """
 from __future__ import annotations
 
@@ -29,10 +48,23 @@ import numpy as np
 
 from repro.core.user import User
 from repro.fleet.rounds import pump_until_deadline
-from repro.kernels.ops import merge_histograms, merge_moments
+from repro.kernels.ops import (
+    merge_histograms,
+    merge_moments,
+    merge_quantile_sketches,
+)
 
 #: Payload template executed inside every vehicle's task container: fold a
-#: signal window through Welford + fixed bins, publish the sketch only.
+#: signal window through Welford + fixed bins + ranked quantile values,
+#: publish the sketch only. This is the per-vehicle ORACLE the fused
+#: device path (`SKETCH_PAYLOAD` → `compute_sketches`) must match bit for
+#: bit, so every operation is pinned to float32 semantics the kernels can
+#: reproduce exactly: the Welford mean/M2 updates run on np.float32
+#: scalars, binning compares against precomputed f32 interior edges
+#: (comparisons are exact where the old width-division was not), and the
+#: quantile summary selects K order statistics at integer ranks of the
+#: f32-sorted window — the same formula as
+#: `kernels.sketch.sketch_reference`.
 ANALYTICS_PAYLOAD = """
 import autospada
 import numpy as np
@@ -40,24 +72,32 @@ import numpy as np
 p = autospada.get_parameters()
 sig = p["signal"]
 xs = autospada.get_signal_window(sig, int(p["window"]))
-x = np.asarray(xs, dtype=np.float64)
-count = 0
-mean = 0.0
-m2 = 0.0
+x = np.asarray(xs, dtype=np.float32)
+count = int(x.shape[0])
+c = np.float32(0.0)
+one = np.float32(1.0)
+mean = np.float32(0.0)
+m2 = np.float32(0.0)
 for v in x:
-    count += 1
-    d = float(v) - mean
-    mean += d / count
-    m2 += d * (float(v) - mean)
+    c = c + one
+    d = v - mean
+    mean = mean + d / c
+    m2 = m2 + d * (v - mean)
 nb = int(p["bins"])
 lo = float(p["lo"])
 hi = float(p["hi"])
+K = int(p["quantile_k"])
+width = (hi - lo) / nb
+edges = (lo + width * np.arange(1, nb)).astype(np.float32)
 if count:
-    width = (hi - lo) / nb
-    idx = np.clip(((x - lo) / width).astype(np.int64), 0, nb - 1)
+    idx = (x[:, None] >= edges[None, :]).sum(axis=1)
     hist = np.bincount(idx, minlength=nb)
+    xs_sorted = np.sort(x)
+    ranks = np.minimum((2 * np.arange(K) + 1) * count // (2 * K), count - 1)
+    qsk = [float(v) for v in xs_sorted[ranks]]
 else:
     hist = np.zeros((nb,), np.int64)
+    qsk = []
 autospada.publish({
     "window_id": int(p["window_id"]),
     "signal": sig,
@@ -65,7 +105,31 @@ autospada.publish({
     "mean": float(mean),
     "m2": float(m2),
     "hist": [int(v) for v in hist],
+    "qsk": qsk,
 })
+"""
+
+#: The vectorized sibling: one `autospada.get_signal_sketch` call. On
+#: plane-attached vehicles the answer comes from the fleet-wide cached
+#: device fold (`FleetSignalPlane.sketch_row`) — the window never crosses
+#: into the sandbox and the ring never crosses to the host — and on any
+#: other source from the identical reference formula, so both payloads
+#: publish the same values bit for bit.
+SKETCH_PAYLOAD = """
+import autospada
+
+p = autospada.get_parameters()
+sk = autospada.get_signal_sketch(
+    p["signal"],
+    int(p["window"]),
+    bins=int(p["bins"]),
+    lo=float(p["lo"]),
+    hi=float(p["hi"]),
+    quantile_k=int(p["quantile_k"]),
+)
+sk["window_id"] = int(p["window_id"])
+sk["signal"] = p["signal"]
+autospada.publish(sk)
 """
 
 
@@ -78,6 +142,8 @@ class AnalyticsConfig:
     bins: int = 16          # fixed-bin histogram resolution
     lo: float = 0.0         # histogram support (clipped at the edges);
     hi: float = 12.0        # default spans the drive-cycle fuel-rate range
+    quantile_k: int = 32    # ranked values per vehicle quantile summary
+    sketch: bool = False    # True: fused device sketches (SKETCH_PAYLOAD)
     deadline_fraction: float = 0.9
     deadline_pumps: int | None = 64
 
@@ -94,10 +160,35 @@ class WindowStats:
     mean: float
     var: float          # population variance of the pooled samples
     hist: np.ndarray    # (bins,) pooled fixed-bin counts
+    #: merged quantile summary: values sorted ascending with cumulative
+    #: weights (sample mass at-or-below each value); None for legacy
+    #: sketches without a `qsk` field
+    q_values: np.ndarray | None = None
+    q_weights: np.ndarray | None = None
 
     @property
     def std(self) -> float:
         return float(np.sqrt(max(self.var, 0.0)))
+
+    def quantile(self, q: float) -> float:
+        """Fleet-level q-quantile estimate from the merged per-vehicle
+        summaries: one searchsorted over the cumulative weights.
+        Deterministic rank error is bounded by ``count / (2 *
+        quantile_k)`` plus one sample per participant — no raw sample
+        ever left a vehicle to earn it. NaN when no samples merged."""
+        if self.q_values is None or self.q_values.size == 0:
+            return float("nan")
+        total = float(self.q_weights[-1])
+        if not total > 0:
+            return float("nan")
+        target = min(max(float(q), 0.0), 1.0) * total
+        i = int(np.searchsorted(self.q_weights, target, side="left"))
+        i = min(i, len(self.q_values) - 1)
+        # zero-weight NaN entries (count-0 vehicles) sort to the tail;
+        # a q=1.0 query must step back onto the last real value
+        while i > 0 and not np.isfinite(self.q_values[i]):
+            i -= 1
+        return float(self.q_values[i])
 
 
 def merge_moments_reference(
@@ -130,6 +221,7 @@ class AnalyticsDriver:
         *,
         engine: Any = None,
         status_oracle: bool = False,
+        metrics: Any = None,
     ):
         self.user = user
         self.cfg = cfg
@@ -138,6 +230,9 @@ class AnalyticsDriver:
         #: status_oracle=True restoring the dense statuses() scan
         self.engine = engine
         self.status_oracle = status_oracle
+        #: FleetMetrics sink for live per-window progress gauges (fed from
+        #: the same status-event counters the deadline check reads)
+        self.metrics = metrics
         self.history: list[WindowStats] = []
         #: raw per-vehicle sketches of the most recent window (tests replay
         #: the batched merge against the sequential reference with these)
@@ -146,9 +241,8 @@ class AnalyticsDriver:
     def run_window(self, window_id: int, pump: Callable[[], None]) -> WindowStats:
         cfg = self.cfg
         clients = self.user.online_clients()
-        payload = self.user.payload(
-            ANALYTICS_PAYLOAD, name=f"analytics-w{window_id}"
-        )
+        source = SKETCH_PAYLOAD if cfg.sketch else ANALYTICS_PAYLOAD
+        payload = self.user.payload(source, name=f"analytics-w{window_id}")
         # one immutable Parameters doc shared by every task — the sketch
         # spec is fleet-wide, unlike FedAvg's per-client data seeds
         params = self.user.parameter(
@@ -158,6 +252,7 @@ class AnalyticsDriver:
                 "bins": cfg.bins,
                 "lo": cfg.lo,
                 "hi": cfg.hi,
+                "quantile_k": cfg.quantile_k,
                 "window_id": window_id,
             }
         )
@@ -166,6 +261,10 @@ class AnalyticsDriver:
             f"analytics window {window_id}", tasks
         ).commit()
         need = max(1, int(len(clients) * cfg.deadline_fraction))
+        on_counts = None
+        if self.metrics is not None:
+            self.metrics.begin_round(window_id, len(clients))
+            on_counts = self.metrics.update_progress
         pumps = pump_until_deadline(
             assign,
             len(clients),
@@ -174,8 +273,13 @@ class AnalyticsDriver:
             pump=pump,
             engine=self.engine,
             status_oracle=self.status_oracle,
+            on_counts=on_counts,
         )
         canceled = assign.cancel()
+        if self.metrics is not None:
+            # final gauge including the deadline cancels (cancel() above
+            # published CANCELED statuses into the same counters)
+            self.metrics.update_progress(assign.counts())
         sketches = []
         for values in assign.results().values():
             for v in values:
@@ -210,6 +314,15 @@ class AnalyticsDriver:
         hists = np.asarray([s["hist"] for s in sketches], np.int64)
         c, mean, m2 = merge_moments(counts, means, m2s)
         hist = merge_histograms(hists)
+        q_values = q_weights = None
+        K = self.cfg.quantile_k
+        if any(len(s.get("qsk") or ()) == K for s in sketches):
+            qvals = np.full((len(sketches), K), np.nan, np.float32)
+            for i, s in enumerate(sketches):
+                q = s.get("qsk") or ()
+                if len(q) == K:
+                    qvals[i] = q
+            q_values, q_weights = merge_quantile_sketches(qvals, counts)
         if c <= 0:
             # every vehicle sketched zero samples (e.g. an unknown signal):
             # there is no statistic to report, same as the no-sketches case
@@ -225,13 +338,15 @@ class AnalyticsDriver:
             mean=mean,
             var=var,
             hist=hist,
+            q_values=q_values,
+            q_weights=q_weights,
         )
 
     # ------------------------------------------------------------------ #
     def format_table(self) -> str:
         head = (
             f"{'window':>6} {'clients':>8} {'canceled':>9} {'samples':>8} "
-            f"{'mean':>9} {'std':>8}  histogram"
+            f"{'mean':>9} {'std':>8} {'p50':>8} {'p90':>8}  histogram"
         )
         lines = [head]
         for r in self.history:
@@ -241,6 +356,7 @@ class AnalyticsDriver:
             )
             lines.append(
                 f"{r.window_id:>6} {r.participants:>8} {r.canceled:>9} "
-                f"{r.count:>8} {r.mean:>9.3f} {r.std:>8.3f}  [{bar}]"
+                f"{r.count:>8} {r.mean:>9.3f} {r.std:>8.3f} "
+                f"{r.quantile(0.5):>8.3f} {r.quantile(0.9):>8.3f}  [{bar}]"
             )
         return "\n".join(lines)

@@ -195,6 +195,11 @@ class EngineService(FleetServiceScheduler):
     in the same ascending order.
     """
 
+    #: events, not masks: the base class skips allocating/growing its
+    #: `_idx`/`_online` per-tick gating arrays for this subclass (they
+    #: were dead weight here — only the mask-based tick() reads them)
+    _uses_masks = False
+
     def __init__(
         self,
         engine: EventEngine,

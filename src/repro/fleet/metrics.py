@@ -37,14 +37,61 @@ class RoundMetrics:
         return self.participants / max(1, self.online_at_start)
 
 
+@dataclass(frozen=True)
+class RoundProgress:
+    """Live gauge of the round currently in flight, fed from the same
+    O(1) `AssignmentDoc.counts()` status-event counters the deadline
+    check reads — progress costs zero extra store scans."""
+
+    round: int
+    total: int          # tasks committed this round/window
+    finished: int = 0
+    error: int = 0
+    canceled: int = 0
+
+    @property
+    def terminal(self) -> int:
+        return self.finished + self.error + self.canceled
+
+    @property
+    def active(self) -> int:
+        return max(0, self.total - self.terminal)
+
+    @property
+    def completion(self) -> float:
+        return self.finished / max(1, self.total)
+
+
 @dataclass
 class FleetMetrics:
     """Accumulates per-round records and derives fleet-level aggregates."""
 
     rounds: list[RoundMetrics] = field(default_factory=list)
+    #: gauge of the in-flight round (None between rounds' commit/close);
+    #: drivers call `begin_round` at commit and `update_progress` on
+    #: every counts snapshot, so dashboards can poll completed / failed /
+    #: canceled live instead of waiting for the round record
+    progress: RoundProgress | None = None
 
     def record(self, rec: RoundMetrics) -> None:
         self.rounds.append(rec)
+
+    # -- live per-round progress (PR 6 follow-up (c)) ------------------- #
+    def begin_round(self, round_id: int, total: int) -> None:
+        self.progress = RoundProgress(round=round_id, total=total)
+
+    def update_progress(self, counts) -> None:
+        """Fold one `TaskCounts` snapshot into the gauge (no-op until
+        `begin_round` opens one)."""
+        if self.progress is None:
+            return
+        self.progress = RoundProgress(
+            round=self.progress.round,
+            total=self.progress.total,
+            finished=counts.finished,
+            error=counts.error,
+            canceled=counts.canceled,
+        )
 
     # ------------------------------------------------------------------ #
     def summary(self) -> dict:

@@ -42,6 +42,7 @@ def pump_until_deadline(
     pump: Callable[[], None],
     engine: Any = None,
     status_oracle: bool = False,
+    on_counts: Callable[[Any], None] | None = None,
 ) -> int:
     """Pump the world until `need` tasks are FINISHED, every task is
     terminal, or the deadline passes (the paper's wall-clock round
@@ -54,7 +55,15 @@ def pump_until_deadline(
     closes when the timer fires (identical to the pump budget whenever
     one pump == one tick, i.e. every driver in this repo).
     `status_oracle=True` restores the dense per-pump statuses() scan —
-    the parity oracle the engine path is tested against bit-for-bit."""
+    the parity oracle the engine path is tested against bit-for-bit.
+
+    `on_counts` (if given) sees every per-pump `TaskCounts` snapshot —
+    the free live-progress feed (`FleetMetrics.update_progress`): the
+    quorum check already holds the counters, so gauges cost zero extra
+    store scans. The oracle branch feeds it from its statuses() scan,
+    keeping the two paths observationally identical."""
+    from repro.core.user import TaskCounts
+
     hard = budget if budget is not None else 100_000
     if status_oracle:
         pumps = 0
@@ -64,10 +73,20 @@ def pump_until_deadline(
             done = sum(
                 s == TaskStatus.FINISHED.value for s in statuses.values()
             )
-            dead = sum(
-                s in (TaskStatus.ERROR.value, TaskStatus.CANCELED.value)
-                for s in statuses.values()
+            err = sum(s == TaskStatus.ERROR.value for s in statuses.values())
+            canc = sum(
+                s == TaskStatus.CANCELED.value for s in statuses.values()
             )
+            dead = err + canc
+            if on_counts is not None:
+                on_counts(
+                    TaskCounts(
+                        finished=done,
+                        error=err,
+                        canceled=canc,
+                        active=n_tasks - done - dead,
+                    )
+                )
             if done >= need or done + dead == n_tasks:
                 return pumps
         if budget is None:  # pragma: no cover
@@ -81,6 +100,8 @@ def pump_until_deadline(
         pumps += 1
         pump()
         c = assign.counts()
+        if on_counts is not None:
+            on_counts(c)
         if c.finished >= need or c.active == 0:
             if deadline is not None:
                 deadline.cancel()
@@ -250,6 +271,7 @@ class FederatedDriver:
         payload_source: str | None = None,
         engine: Any = None,
         status_oracle: bool = False,
+        metrics: Any = None,
     ):
         self.user = user
         self.cfg = cfg
@@ -257,6 +279,9 @@ class FederatedDriver:
         self.engine = engine
         #: True = close rounds on dense statuses() scans (parity oracle)
         self.status_oracle = status_oracle
+        #: FleetMetrics sink for live per-round progress gauges (fed from
+        #: the same status-event counters the deadline check reads)
+        self.metrics = metrics
         #: task container source; override to exercise bespoke uploads
         self.payload_source = payload_source or ROUND_PAYLOAD
         self.w = np.zeros((dim,), np.float32)
@@ -294,6 +319,10 @@ class FederatedDriver:
         assign = self.user.assignment(f"fedavg round {rnd}", tasks).commit()
 
         need = max(1, int(len(clients) * self.cfg.deadline_fraction))
+        on_counts = None
+        if self.metrics is not None:
+            self.metrics.begin_round(rnd, len(clients))
+            on_counts = self.metrics.update_progress
         pumps = pump_until_deadline(
             assign,
             len(clients),
@@ -302,9 +331,13 @@ class FederatedDriver:
             pump=pump,
             engine=self.engine,
             status_oracle=self.status_oracle,
+            on_counts=on_counts,
         )
         # deadline reached: cancel stragglers (paper lifecycle semantics)
         canceled = assign.cancel()
+        if self.metrics is not None:
+            # final gauge including the deadline cancels
+            self.metrics.update_progress(assign.counts())
         msgs = []
         for task_id, values in assign.results().items():
             for v in values:

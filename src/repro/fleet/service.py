@@ -107,6 +107,13 @@ class FleetServiceScheduler:
     candidate indices, in ascending order — the dense loop's order.
     """
 
+    #: The mask-based tick() gates the fleet with per-index numpy arrays
+    #: (`_idx`, `_online`). `EngineService` replaces tick() with heap-fed
+    #: events and never reads them, so it opts out and the event path
+    #: carries no dead per-tick gating state (the dense oracle keeps its
+    #: own copy).
+    _uses_masks = True
+
     def __init__(
         self,
         pool: "FleetPool",
@@ -122,8 +129,9 @@ class FleetServiceScheduler:
         self.straggler_period = straggler_period
         n = max(1, len(pool.vehicles))
         self._capacity = n
-        self._idx = np.arange(n)
-        self._online = np.zeros(n, bool)
+        if self._uses_masks:
+            self._idx = np.arange(n)
+            self._online = np.zeros(n, bool)
         self._runnable = np.zeros(n, bool)
         self._straggler = np.zeros(n, bool)
         self._clients: list["EdgeClient | None"] = [None] * n
@@ -175,19 +183,23 @@ class FleetServiceScheduler:
         if i < self._capacity:
             return
         cap = max(i + 1, 2 * self._capacity)
-        for name in ("_online", "_runnable", "_straggler"):
+        names = ("_runnable", "_straggler")
+        if self._uses_masks:
+            names += ("_online",)
+            self._idx = np.arange(cap)
+        for name in names:
             arr = np.zeros(cap, bool)
             arr[: self._capacity] = getattr(self, name)
             setattr(self, name, arr)
         self._clients.extend([None] * (cap - self._capacity))
-        self._idx = np.arange(cap)
         self._capacity = cap
 
     # pool membership hooks ------------------------------------------------
     def client_powered_on(self, index: int, client: "EdgeClient") -> None:
         self._ensure_index(index)
         self._clients[index] = client
-        self._online[index] = True
+        if self._uses_masks:
+            self._online[index] = True
         client.set_wake(self._make_wake(index))
         # bootstrap already spawned ops before the hook ran: seed from the
         # client's actual state rather than assuming idle
@@ -206,7 +218,8 @@ class FleetServiceScheduler:
         if c is not None:
             c.set_wake(None)
         self._clients[index] = None
-        self._online[index] = False
+        if self._uses_masks:
+            self._online[index] = False
         self._runnable[index] = False
 
     # ------------------------------------------------------------------ #

@@ -383,6 +383,7 @@ class FleetSimulator:
             n_samples=n_samples,
             engine=self.engine,
             status_oracle=self.engine is None,
+            metrics=self.metrics,
         )
         for rnd in range(rounds):
             online = len(self.pool.online())
@@ -432,6 +433,7 @@ class FleetSimulator:
             cfg,
             engine=self.engine,
             status_oracle=self.engine is None,
+            metrics=self.metrics,
         )
         for w in range(windows):
             online = len(self.pool.online())

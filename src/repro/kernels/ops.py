@@ -104,3 +104,40 @@ def merge_histograms(hists: np.ndarray | jax.Array) -> np.ndarray:
     (exact integer counts)."""
     out = _merge_histograms(jnp.asarray(hists, jnp.int32))
     return np.asarray(jax.block_until_ready(out)).astype(np.int64)
+
+
+@jax.jit
+def _merge_quantile_sketches(qvals: jax.Array, counts: jax.Array):
+    """Weight and co-sort all clients' quantile summaries at once.
+
+    Each of client i's K order statistics stands for count_i / K of its
+    samples; NaN entries (count-0 clients, padding) get zero weight so
+    they can't shift ranks. argsort puts NaNs last, so the zero-weight
+    tail never sits between real values."""
+    K = qvals.shape[1]
+    w = jnp.broadcast_to((counts / K)[:, None], qvals.shape).reshape(-1)
+    v = qvals.reshape(-1)
+    w = jnp.where(jnp.isnan(v), 0.0, w)
+    order = jnp.argsort(v)
+    return v[order], w[order]
+
+
+def merge_quantile_sketches(
+    qvals: np.ndarray | jax.Array,   # (N, K) per-client ranked values
+    counts: np.ndarray | jax.Array,  # (N,) per-client sample counts
+) -> tuple[np.ndarray, np.ndarray]:
+    """Merge N clients' K-point quantile summaries (KLL-style: equal-
+    weight order statistics from `compute_sketches` / the payload fold)
+    into one fleet summary.
+
+    Returns ``(values, cumulative_weights)`` sorted ascending;
+    `WindowStats.quantile` answers queries with one searchsorted.
+    Deterministic rank error is at most ``total / (2K)`` plus one sample
+    per client (each client's j-th statistic is the midpoint of its j-th
+    weight-``count/K`` block). The O(NK log NK) co-sort runs on device;
+    the weight cumsum happens in float64 on the host so fleet-scale
+    pooled counts don't lose rank precision to f32 accumulation."""
+    v, w = _merge_quantile_sketches(
+        jnp.asarray(qvals, jnp.float32), jnp.asarray(counts, jnp.float32)
+    )
+    return np.asarray(v), np.cumsum(np.asarray(w, np.float64))

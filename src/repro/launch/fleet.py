@@ -80,6 +80,13 @@ def build_parser() -> argparse.ArgumentParser:
                     help="on-vehicle samples per sketch")
     ap.add_argument("--bins", type=int, default=16,
                     help="fixed-bin histogram resolution")
+    ap.add_argument("--quantile-k", type=int, default=32,
+                    help="ranked values per vehicle quantile summary")
+    ap.add_argument("--sketch", action="store_true",
+                    help="fold windows on device via one fused fleet-wide "
+                         "sketch kernel (autospada.get_signal_sketch) "
+                         "instead of per-vehicle sandbox loops — same "
+                         "result, bit for bit")
     ap.add_argument("--warmup-ticks", type=int, default=16,
                     help="world ticks before the first analytics window")
     return ap
@@ -116,6 +123,8 @@ def main() -> None:
                 signal=args.signal,
                 window=args.window,
                 bins=args.bins,
+                quantile_k=args.quantile_k,
+                sketch=args.sketch,
                 deadline_fraction=args.deadline,
                 deadline_pumps=args.deadline_pumps,
             ),
@@ -128,6 +137,7 @@ def main() -> None:
             last = driver.history[-1]
             print(
                 f"fleet {args.signal}: mean={last.mean:.4f} std={last.std:.4f} "
+                f"p50={last.quantile(0.5):.4f} p90={last.quantile(0.9):.4f} "
                 f"over {last.count} on-vehicle samples "
                 f"(checksum {last.mean + last.var:.6f})"
             )

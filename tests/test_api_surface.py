@@ -16,6 +16,7 @@ from repro.core.payload_api import AUTOSPADA_API
 EXPECTED_API = (
     "get_signal",
     "get_signal_window",
+    "get_signal_sketch",
     "publish",
     "get_parameters",
     "cache_state",
@@ -85,6 +86,12 @@ def test_dummy_context_implements_the_whole_contract():
                 assert isinstance(ctx.get_signal("Vehicle.Speed"), float)
             elif name == "get_signal_window":
                 assert len(ctx.get_signal_window("Vehicle.Speed", 4)) == 4
+            elif name == "get_signal_sketch":
+                sk = ctx.get_signal_sketch("Vehicle.Speed", 8)
+                assert sk["count"] == 8
+                assert len(sk["hist"]) == 16 and sum(sk["hist"]) == 8
+                assert len(sk["qsk"]) == 32
+                assert sorted(sk["qsk"]) == sk["qsk"]
             elif name == "publish":
                 ctx.publish({"ok": True})
             elif name == "get_parameters":
