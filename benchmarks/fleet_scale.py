@@ -47,6 +47,11 @@ Eight sections, CSV rows like the rest of the harness:
   recompile + full history-ring realloc per join) vs geometric capacity
   doubling (O(log N) regrows). Geometric must win (CI guard; >= 3x in
   full mode).
+* ``fleet/ckpt_*`` — durable fleet state: one whole-platform
+  `FleetCheckpoint.save` and `restore` of an N=4096 world (manifest +
+  content-addressed npy blobs). Guarded by a generous wall-time budget
+  rather than a speedup — there is no per-client baseline, only a
+  ceiling pathological serialization would blow (CI guard).
 * ``fleet/sim_*`` — end-to-end discrete-event simulation: >= 1000 clients,
   >= 5 FedAvg rounds under a seeded lossy-broker schedule with stragglers,
   reporting clients/sec. In full (non ``--fast``) mode the run is repeated
@@ -114,6 +119,14 @@ SKETCH_TARGET_SPEEDUP = 3.0
 #: the tentpole claim is pinned at fleet scale in fast mode too
 SKETCH_N = 4096
 SKETCH_WINDOW = 64
+#: whole-platform checkpoint save/restore budgets at fleet scale
+#: (``fleet/ckpt_*``): generous wall-time ceilings — measured ~1.1s each
+#: at N=4096 on a dev box — that catch pathological regressions (per-
+#: vehicle file writes, an accidental O(N^2) codec) without flaking on
+#: throttled shared runners
+CKPT_N = 4096
+CKPT_MAX_SAVE_S = 15.0
+CKPT_MAX_RESTORE_S = 15.0
 #: acceptance floor for geometric plane growth vs exact per-join regrowth
 GROW_TARGET_SPEEDUP = 3.0
 #: every exact-path join is an XLA recompile (~0.5s), so joins drive this
@@ -536,6 +549,72 @@ def plane_growth_rows(
     ], speedups
 
 
+def checkpoint_rows(
+    fast: bool,
+) -> tuple[list[tuple[str, float, str]], dict[int, float]]:
+    """Durable-fleet-state cost at fleet scale: one whole-platform
+    `FleetCheckpoint.save` (broker + documents + vehicles + plane ring +
+    engine heap -> manifest + content-addressed npy blobs) and one
+    `restore` (fresh simulator build + state overwrite) of an N=4096
+    world with a completed FedAvg round in flight history. The guard is
+    a wall-time budget, not a speedup: there is no per-client baseline
+    to race, only a ceiling that pathological serialization would blow."""
+    import shutil
+    import tempfile
+    from pathlib import Path
+
+    from repro.fleet import FedConfig, FleetSimulator, SimConfig
+    from repro.fleet.checkpoint import FleetCheckpoint
+
+    n = CKPT_N
+    reps = 3
+    sim = FleetSimulator(
+        SimConfig(
+            n_clients=n, seed=9, p_drop=0.05, max_delay=2,
+            straggler_fraction=0.1,
+        )
+    )
+    drv = sim.run_federated(
+        FedConfig(
+            local_steps=1, local_lr=0.2, deadline_fraction=0.9,
+            deadline_pumps=48,
+        ),
+        dim=32, rounds=1, n_samples=8,
+    )
+    root = Path(tempfile.mkdtemp(prefix="fleet-ckpt-bench-"))
+    try:
+        def save() -> None:
+            shutil.rmtree(root / "ck", ignore_errors=True)
+            FleetCheckpoint.save(sim, root / "ck", driver=drv)
+
+        save()  # a checkpoint must exist before the first restore sample
+        t_save = _time(save, reps)
+        t_restore = _time(lambda: FleetCheckpoint.restore(root / "ck"), reps)
+        blobs = len(list((root / "ck" / "arrays").glob("*.npy")))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    # guard ratio: budget / measured — < 1.0 means the budget is blown
+    speedups = {
+        n: min(
+            CKPT_MAX_SAVE_S * 1e6 / t_save,
+            CKPT_MAX_RESTORE_S * 1e6 / t_restore,
+        )
+    }
+    return [
+        (
+            f"fleet/ckpt_save_N{n}",
+            t_save,
+            f"whole-platform save, {blobs} content-addressed blobs, "
+            f"{CKPT_MAX_SAVE_S:.0f}s budget",
+        ),
+        (
+            f"fleet/ckpt_restore_N{n}",
+            t_restore,
+            f"fresh build + state overwrite, {CKPT_MAX_RESTORE_S:.0f}s budget",
+        ),
+    ], speedups
+
+
 def simulator_rows(fast: bool) -> list[tuple[str, float, str]]:
     from repro.fleet import FedConfig, FleetSimulator, SimConfig
 
@@ -606,6 +685,7 @@ def rows(
     engine, engine_speedups = _measure_guarded(engine_rows, _engine_guard, fast)
     sketch, sketch_speedups = _measure_guarded(sketch_rows, _sketch_guard, fast)
     grow, grow_speedups = _measure_guarded(plane_growth_rows, _grow_guard, fast)
+    ckpt, ckpt_speedups = _measure_guarded(checkpoint_rows, _ckpt_guard, fast)
     guards = {
         "agg": agg_speedups,
         "plane": plane_speedups,
@@ -614,9 +694,10 @@ def rows(
         "engine": engine_speedups,
         "sketch": sketch_speedups,
         "grow": grow_speedups,
+        "ckpt": ckpt_speedups,
     }
     return (
-        agg + plane + sharded + service + engine + sketch + grow
+        agg + plane + sharded + service + engine + sketch + grow + ckpt
         + simulator_rows(fast),
         guards,
     )
@@ -735,6 +816,20 @@ def _grow_guard(speedups: dict[int, float], *, fast: bool) -> str | None:
     return None
 
 
+def _ckpt_guard(speedups: dict[int, float], *, fast: bool) -> str | None:
+    """The ratio is budget/measured, identical in both modes: the section
+    always runs at N=4096 and the budget is ~13x the measured cost, so
+    tripping it means checkpoint serialization regressed massively."""
+    n_max = max(speedups)
+    if speedups[n_max] < 1.0:
+        return (
+            f"fleet checkpoint save/restore at N={n_max} blew its "
+            f"{CKPT_MAX_SAVE_S:.0f}s wall-time budget "
+            f"({speedups[n_max]:.2f}x headroom)"
+        )
+    return None
+
+
 _GUARDS = {
     "agg": _agg_guard,
     "plane": _plane_guard,
@@ -743,6 +838,7 @@ _GUARDS = {
     "engine": _engine_guard,
     "sketch": _sketch_guard,
     "grow": _grow_guard,
+    "ckpt": _ckpt_guard,
 }
 
 

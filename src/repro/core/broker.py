@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import fnmatch
 import heapq
-import itertools
+from repro.core.counter import Counter
 import threading
 from collections import deque
 from dataclasses import dataclass, field
@@ -183,15 +183,15 @@ class Broker:
         #: wildcard subscriptions, matched by fnmatch on publish
         self._wild: list[Subscription] = []
         self._faults = faults or FaultPlan()
-        self._ids = itertools.count()
-        self._sub_order = itertools.count()
+        self._ids = Counter()
+        self._sub_order = Counter()
         self._lock = threading.Lock()
         self.published = 0
         self.delivered = 0
         self.dropped = 0
         # -- logical time (discrete-event simulation hook) -------------- #
         self.now = 0
-        self._delay_order = itertools.count()
+        self._delay_order = Counter()
         #: (due_tick, enqueue_order, subscription, message)
         self._delayed: list[tuple[int, int, Subscription, Message]] = []
 

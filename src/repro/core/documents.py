@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import hashlib
-import itertools
+from repro.core.counter import Counter
 import json
 from typing import Any, Mapping
 
@@ -40,7 +40,7 @@ def is_valid_transition(src: TaskStatus, dst: TaskStatus) -> bool:
     return dst in VALID_TRANSITIONS[src]
 
 
-_ids = itertools.count()
+_ids = Counter()
 
 
 def new_id(prefix: str) -> str:

@@ -2,9 +2,11 @@ from repro.core.plane_sharded import ShardedSignalPlane
 from repro.fleet.analytics import (
     AnalyticsConfig,
     AnalyticsDriver,
+    WindowInFlight,
     WindowStats,
     merge_moments_reference,
 )
+from repro.fleet.checkpoint import CheckpointError, FleetCheckpoint
 from repro.fleet.churn import DenseChurn, EventChurn, geometric_gap, make_churn
 from repro.fleet.engine import (
     PHASE_CHURN,
@@ -22,7 +24,9 @@ from repro.fleet.federated import FedConfig, aggregate_deltas, client_delta, loc
 from repro.fleet.elastic import FleetPool
 from repro.fleet.metrics import FleetMetrics, RoundMetrics
 from repro.fleet.rounds import (
+    DeadlinePump,
     FederatedDriver,
+    RoundInFlight,
     aggregate_packed,
     aggregate_reference,
     mean_reported_loss,
@@ -46,16 +50,17 @@ from repro.fleet.simulator import (
 )
 
 __all__ = [
-    "AnalyticsConfig", "AnalyticsDriver", "Backends", "ChurnBackend",
-    "DenseChurn", "DensePollService", "EngineBackend", "EngineService",
-    "ErrorFeedback", "EventChurn", "EventEngine", "FedConfig",
-    "FederatedDriver", "FleetMetrics", "FleetPool", "FleetServiceScheduler",
-    "FleetSimulator", "PHASE_CHURN", "PHASE_SERVICE", "PHASE_TIMER",
-    "PLANES", "PlaneBackend", "RoundMetrics", "SCENARIOS", "SIGNALS",
-    "Scenario", "ServiceBackend", "ShardedSignalPlane", "SimConfig",
-    "WindowStats", "aggregate_deltas", "aggregate_packed",
-    "aggregate_reference", "batched_dequant_mean", "build_plane",
-    "client_delta", "geometric_gap", "local_sgd", "make_churn",
-    "make_codec", "make_service", "mean_reported_loss",
+    "AnalyticsConfig", "AnalyticsDriver", "Backends", "CheckpointError",
+    "ChurnBackend", "DeadlinePump", "DenseChurn", "DensePollService",
+    "EngineBackend", "EngineService", "ErrorFeedback", "EventChurn",
+    "EventEngine", "FedConfig", "FederatedDriver", "FleetCheckpoint",
+    "FleetMetrics", "FleetPool", "FleetServiceScheduler", "FleetSimulator",
+    "PHASE_CHURN", "PHASE_SERVICE", "PHASE_TIMER", "PLANES",
+    "PlaneBackend", "RoundInFlight", "RoundMetrics", "SCENARIOS",
+    "SIGNALS", "Scenario", "ServiceBackend", "ShardedSignalPlane",
+    "SimConfig", "WindowInFlight", "WindowStats", "aggregate_deltas",
+    "aggregate_packed", "aggregate_reference", "batched_dequant_mean",
+    "build_plane", "client_delta", "geometric_gap", "local_sgd",
+    "make_churn", "make_codec", "make_service", "mean_reported_loss",
     "merge_moments_reference", "pump_until_deadline", "stack_deltas",
 ]

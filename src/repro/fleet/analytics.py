@@ -46,8 +46,8 @@ from typing import Any, Callable, Iterable
 
 import numpy as np
 
-from repro.core.user import User
-from repro.fleet.rounds import pump_until_deadline
+from repro.core.user import AssignmentDoc, User
+from repro.fleet.rounds import DeadlinePump
 from repro.kernels.ops import (
     merge_histograms,
     merge_moments,
@@ -210,6 +210,18 @@ def merge_moments_reference(
     return c, mean, m2
 
 
+@dataclasses.dataclass
+class WindowInFlight:
+    """A committed-but-not-closed analytics window: the assignment plus
+    its armed `DeadlinePump` (the analytics twin of
+    `repro.fleet.rounds.RoundInFlight`)."""
+
+    window_id: int
+    n_clients: int
+    assign: AssignmentDoc
+    pump: DeadlinePump
+
+
 class AnalyticsDriver:
     """Runs windowed streaming-statistics assignments through the platform
     (the analytics sibling of `FederatedDriver`)."""
@@ -238,7 +250,12 @@ class AnalyticsDriver:
         #: the batched merge against the sequential reference with these)
         self.last_sketches: list[dict[str, Any]] = []
 
-    def run_window(self, window_id: int, pump: Callable[[], None]) -> WindowStats:
+    def start_window(
+        self, window_id: int, pump: Callable[[], None]
+    ) -> "WindowInFlight":
+        """Commit one window's assignment and arm its deadline pump
+        without pumping — the suspension point `repro.fleet.checkpoint`
+        uses to snapshot a window mid-flight."""
         cfg = self.cfg
         clients = self.user.online_clients()
         source = SKETCH_PAYLOAD if cfg.sketch else ANALYTICS_PAYLOAD
@@ -265,7 +282,7 @@ class AnalyticsDriver:
         if self.metrics is not None:
             self.metrics.begin_round(window_id, len(clients))
             on_counts = self.metrics.update_progress
-        pumps = pump_until_deadline(
+        dpump = DeadlinePump(
             assign,
             len(clients),
             need=need,
@@ -275,6 +292,18 @@ class AnalyticsDriver:
             status_oracle=self.status_oracle,
             on_counts=on_counts,
         )
+        return WindowInFlight(
+            window_id=window_id,
+            n_clients=len(clients),
+            assign=assign,
+            pump=dpump,
+        )
+
+    def finish_window(self, wif: "WindowInFlight") -> WindowStats:
+        """Pump an in-flight window to its close and merge the sketches."""
+        window_id = wif.window_id
+        assign = wif.assign
+        pumps = wif.pump.run()
         canceled = assign.cancel()
         if self.metrics is not None:
             # final gauge including the deadline cancels (cancel() above
@@ -293,6 +322,11 @@ class AnalyticsDriver:
         rec = self._merge(window_id, sketches, canceled=canceled, pumps=pumps)
         self.history.append(rec)
         return rec
+
+    def run_window(
+        self, window_id: int, pump: Callable[[], None]
+    ) -> WindowStats:
+        return self.finish_window(self.start_window(window_id, pump))
 
     def _merge(
         self,

@@ -30,7 +30,7 @@ faults × churn × stragglers grid.
 from __future__ import annotations
 
 import heapq
-import itertools
+from repro.core.counter import Counter
 import threading
 from collections import deque
 from functools import partial
@@ -88,7 +88,7 @@ class EventEngine:
     def __init__(self, broker: "Broker | None" = None):
         self._broker = broker
         self._heap: list[tuple[int, int, int, int, Entry]] = []
-        self._seq = itertools.count()
+        self._seq = Counter()
         self._wakes: dict[str, Callable[[], None]] = {}
         #: last drained tick; during a drain, the tick being drained
         self.now = 0

@@ -17,6 +17,7 @@ same network-budget discipline the paper applies with protobuf/MQTT.
 from __future__ import annotations
 
 import base64
+import dataclasses
 import json
 import math
 from typing import Any, Callable
@@ -33,21 +34,12 @@ from repro.fleet.federated import FedConfig
 # shared deadline-driven assignment pump (FedAvg rounds, analytics       #
 # windows — every platform workload closes rounds the same way)          #
 # --------------------------------------------------------------------- #
-def pump_until_deadline(
-    assign: AssignmentDoc,
-    n_tasks: int,
-    *,
-    need: int,
-    budget: int | None,
-    pump: Callable[[], None],
-    engine: Any = None,
-    status_oracle: bool = False,
-    on_counts: Callable[[Any], None] | None = None,
-) -> int:
-    """Pump the world until `need` tasks are FINISHED, every task is
+class DeadlinePump:
+    """Resumable deadline-driven assignment pump.
+
+    Pumps the world until `need` tasks are FINISHED, every task is
     terminal, or the deadline passes (the paper's wall-clock round
-    deadline: close on time with whatever arrived). Returns pumps used.
-    Raises TimeoutError only for unbounded waits that never quiesce.
+    deadline: close on time with whatever arrived).
 
     The quorum check reads `AssignmentDoc.counts()` — O(1) counters
     maintained by status events — never a per-pump `statuses()` rebuild.
@@ -61,60 +53,132 @@ def pump_until_deadline(
     the free live-progress feed (`FleetMetrics.update_progress`): the
     quorum check already holds the counters, so gauges cost zero extra
     store scans. The oracle branch feeds it from its statuses() scan,
-    keeping the two paths observationally identical."""
-    from repro.core.user import TaskCounts
+    keeping the two paths observationally identical.
 
-    hard = budget if budget is not None else 100_000
-    if status_oracle:
-        pumps = 0
-        for pumps in range(1, hard + 1):
-            pump()
-            statuses = assign.statuses()
-            done = sum(
-                s == TaskStatus.FINISHED.value for s in statuses.values()
-            )
-            err = sum(s == TaskStatus.ERROR.value for s in statuses.values())
-            canc = sum(
-                s == TaskStatus.CANCELED.value for s in statuses.values()
-            )
-            dead = err + canc
-            if on_counts is not None:
-                on_counts(
-                    TaskCounts(
-                        finished=done,
-                        error=err,
-                        canceled=canc,
-                        active=n_tasks - done - dead,
-                    )
-                )
-            if done >= need or done + dead == n_tasks:
-                return pumps
-        if budget is None:  # pragma: no cover
-            raise TimeoutError("assignment did not reach its deadline quorum")
-        return pumps
-    deadline = None
-    if engine is not None and budget is not None:
-        deadline = engine.schedule(engine.now + budget)
-    pumps = 0
-    while True:
-        pumps += 1
-        pump()
-        c = assign.counts()
-        if on_counts is not None:
-            on_counts(c)
-        if c.finished >= need or c.active == 0:
-            if deadline is not None:
-                deadline.cancel()
-            return pumps
-        if deadline is not None:
-            if deadline.fired:
-                return pumps
-        elif pumps >= hard:
-            if budget is None:  # pragma: no cover
+    The pump is an explicit object (not a loop) so a round can be
+    suspended *mid-flight*: `step()` advances one pump and reports
+    whether the round closed, and all progress lives in plain fields
+    (`pumps`, `closed`, `deadline`) that `repro.fleet.checkpoint`
+    snapshots and restores bit-for-bit."""
+
+    def __init__(
+        self,
+        assign: AssignmentDoc,
+        n_tasks: int,
+        *,
+        need: int,
+        budget: int | None,
+        pump: Callable[[], None],
+        engine: Any = None,
+        status_oracle: bool = False,
+        on_counts: Callable[[Any], None] | None = None,
+    ):
+        self.assign = assign
+        self.n_tasks = n_tasks
+        self.need = need
+        self.budget = budget
+        self.pump = pump
+        self.engine = engine
+        self.status_oracle = status_oracle
+        self.on_counts = on_counts
+        self.hard = budget if budget is not None else 100_000
+        self.pumps = 0
+        self.closed = False
+        self.deadline = None
+        if not status_oracle and engine is not None and budget is not None:
+            self.deadline = engine.schedule(engine.now + budget)
+
+    def step(self) -> bool:
+        """One pump of the world plus one quorum check. Returns True once
+        the round is closed (idempotent after that)."""
+        if self.closed:
+            return True
+        if self.status_oracle:
+            return self._step_oracle()
+        self.pumps += 1
+        self.pump()
+        c = self.assign.counts()
+        if self.on_counts is not None:
+            self.on_counts(c)
+        if c.finished >= self.need or c.active == 0:
+            if self.deadline is not None:
+                self.deadline.cancel()
+            self.closed = True
+        elif self.deadline is not None:
+            if self.deadline.fired:
+                self.closed = True
+        elif self.pumps >= self.hard:
+            if self.budget is None:  # pragma: no cover
                 raise TimeoutError(
                     "assignment did not reach its deadline quorum"
                 )
-            return pumps
+            self.closed = True
+        return self.closed
+
+    def _step_oracle(self) -> bool:
+        from repro.core.user import TaskCounts
+
+        # budget exhaustion is checked *before* pumping: the original
+        # `for pumps in range(1, hard + 1)` loop never pumped past `hard`
+        # (and never pumped at all for hard == 0)
+        if self.pumps >= self.hard:
+            if self.budget is None:  # pragma: no cover
+                raise TimeoutError(
+                    "assignment did not reach its deadline quorum"
+                )
+            self.closed = True
+            return True
+        self.pumps += 1
+        self.pump()
+        statuses = self.assign.statuses()
+        done = sum(s == TaskStatus.FINISHED.value for s in statuses.values())
+        err = sum(s == TaskStatus.ERROR.value for s in statuses.values())
+        canc = sum(s == TaskStatus.CANCELED.value for s in statuses.values())
+        dead = err + canc
+        if self.on_counts is not None:
+            self.on_counts(
+                TaskCounts(
+                    finished=done,
+                    error=err,
+                    canceled=canc,
+                    active=self.n_tasks - done - dead,
+                )
+            )
+        if done >= self.need or done + dead == self.n_tasks:
+            self.closed = True
+        return self.closed
+
+    def run(self) -> int:
+        """Pump to close; returns total pumps used (across suspensions)."""
+        while not self.step():
+            pass
+        return self.pumps
+
+
+def pump_until_deadline(
+    assign: AssignmentDoc,
+    n_tasks: int,
+    *,
+    need: int,
+    budget: int | None,
+    pump: Callable[[], None],
+    engine: Any = None,
+    status_oracle: bool = False,
+    on_counts: Callable[[Any], None] | None = None,
+) -> int:
+    """One-shot wrapper over `DeadlinePump`: pump to close, return pumps
+    used. Raises TimeoutError only for unbounded waits that never
+    quiesce."""
+    return DeadlinePump(
+        assign,
+        n_tasks,
+        need=need,
+        budget=budget,
+        pump=pump,
+        engine=engine,
+        status_oracle=status_oracle,
+        on_counts=on_counts,
+    ).run()
 
 
 # --------------------------------------------------------------------- #
@@ -297,7 +361,10 @@ class FederatedDriver:
         #: replay the aggregation against the reference loop)
         self.last_msgs: list[dict[str, Any]] = []
 
-    def run_round(self, rnd: int, pump: Callable[[], None]) -> dict[str, Any]:
+    def start_round(self, rnd: int, pump: Callable[[], None]) -> "RoundInFlight":
+        """Commit one round's assignment and arm its deadline pump without
+        pumping — the suspension point `repro.fleet.checkpoint` uses to
+        snapshot a round mid-flight."""
         clients = self.user.online_clients()
         payload = self.user.payload(self.payload_source, name=f"fedavg-r{rnd}")
         tasks = []
@@ -323,7 +390,7 @@ class FederatedDriver:
         if self.metrics is not None:
             self.metrics.begin_round(rnd, len(clients))
             on_counts = self.metrics.update_progress
-        pumps = pump_until_deadline(
+        dpump = DeadlinePump(
             assign,
             len(clients),
             need=need,
@@ -333,6 +400,15 @@ class FederatedDriver:
             status_oracle=self.status_oracle,
             on_counts=on_counts,
         )
+        return RoundInFlight(
+            rnd=rnd, n_clients=len(clients), assign=assign, pump=dpump
+        )
+
+    def finish_round(self, rif: "RoundInFlight") -> dict[str, Any]:
+        """Pump an in-flight round to its close and aggregate."""
+        rnd = rif.rnd
+        assign = rif.assign
+        pumps = rif.pump.run()
         # deadline reached: cancel stragglers (paper lifecycle semantics)
         canceled = assign.cancel()
         if self.metrics is not None:
@@ -366,3 +442,19 @@ class FederatedDriver:
         }
         self.history.append(rec)
         return rec
+
+    def run_round(self, rnd: int, pump: Callable[[], None]) -> dict[str, Any]:
+        return self.finish_round(self.start_round(rnd, pump))
+
+
+@dataclasses.dataclass
+class RoundInFlight:
+    """A committed-but-not-closed FedAvg round: the assignment plus its
+    armed `DeadlinePump`. Produced by `FederatedDriver.start_round`,
+    consumed by `finish_round` — and by `repro.fleet.checkpoint`, which
+    snapshots/restores one to checkpoint mid-round with tasks in flight."""
+
+    rnd: int
+    n_clients: int
+    assign: AssignmentDoc
+    pump: DeadlinePump

@@ -369,23 +369,35 @@ class FleetSimulator:
         w_true: np.ndarray | None = None,
         rounds: int = 5,
         n_samples: int = 32,
+        driver: FederatedDriver | None = None,
+        on_round: Callable[[int, FederatedDriver], None] | None = None,
     ) -> FederatedDriver:
         """Run `rounds` FedAvg rounds over the simulated fleet, recording
         per-round `RoundMetrics`. Returns the driver (final model in
-        `driver.w`, per-round records in `driver.history`)."""
-        if w_true is None:
-            w_true = np.sin(np.linspace(0.0, 3.0, dim)).astype(np.float32)
-        driver = FederatedDriver(
-            self.user,
-            fed,
-            dim=dim,
-            w_true=w_true,
-            n_samples=n_samples,
-            engine=self.engine,
-            status_oracle=self.engine is None,
-            metrics=self.metrics,
-        )
-        for rnd in range(rounds):
+        `driver.w`, per-round records in `driver.history`).
+
+        Pass a `driver` (e.g. one restored by `FleetCheckpoint.restore`)
+        to run `rounds` MORE rounds, continuing the numbering where its
+        history left off. `on_round(rnd, driver)` fires after each round
+        is recorded — the hook `launch.fleet --checkpoint-every` uses to
+        save durable checkpoints mid-campaign."""
+        start = 0
+        if driver is None:
+            if w_true is None:
+                w_true = np.sin(np.linspace(0.0, 3.0, dim)).astype(np.float32)
+            driver = FederatedDriver(
+                self.user,
+                fed,
+                dim=dim,
+                w_true=w_true,
+                n_samples=n_samples,
+                engine=self.engine,
+                status_oracle=self.engine is None,
+                metrics=self.metrics,
+            )
+        else:
+            start = len(driver.history)
+        for rnd in range(start, start + rounds):
             online = len(self.pool.online())
             t0, tick0 = time.perf_counter(), self.t
             pub0, del0, drop0 = (
@@ -409,6 +421,8 @@ class FleetSimulator:
                     dist_to_optimum=rec["dist_to_optimum"],
                 )
             )
+            if on_round is not None:
+                on_round(rnd, driver)
         return driver
 
     # ------------------------------------------------------------------ #
@@ -420,22 +434,33 @@ class FleetSimulator:
         *,
         windows: int = 5,
         warmup_ticks: int = 0,
+        driver: AnalyticsDriver | None = None,
+        on_window: Callable[[int, AnalyticsDriver], None] | None = None,
     ) -> AnalyticsDriver:
         """Run `windows` streaming-statistics assignments over the fleet:
         vehicles fold their signal windows into Welford/histogram sketches
         on-board; the server merges all sketches in one batched jit
         reduction per window. `warmup_ticks` advances the world first so
-        the signal plane's history ring has data to window over."""
-        for _ in range(warmup_ticks):
-            self.tick()
-        driver = AnalyticsDriver(
-            self.user,
-            cfg,
-            engine=self.engine,
-            status_oracle=self.engine is None,
-            metrics=self.metrics,
-        )
-        for w in range(windows):
+        the signal plane's history ring has data to window over.
+
+        Pass a `driver` (e.g. one restored by `FleetCheckpoint.restore`)
+        to run `windows` MORE windows continuing its history (warmup is
+        skipped — the restored world already carries the ring).
+        `on_window(w, driver)` fires after each window is recorded."""
+        start = 0
+        if driver is None:
+            for _ in range(warmup_ticks):
+                self.tick()
+            driver = AnalyticsDriver(
+                self.user,
+                cfg,
+                engine=self.engine,
+                status_oracle=self.engine is None,
+                metrics=self.metrics,
+            )
+        else:
+            start = len(driver.history)
+        for w in range(start, start + windows):
             online = len(self.pool.online())
             t0, tick0 = time.perf_counter(), self.t
             pub0, del0, drop0 = (
@@ -457,4 +482,6 @@ class FleetSimulator:
                     wall_s=time.perf_counter() - t0,
                 )
             )
+            if on_window is not None:
+                on_window(w, driver)
         return driver

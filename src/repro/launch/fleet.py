@@ -19,11 +19,15 @@ an identical final aggregate (printed as a checksum so drift is visible).
 from __future__ import annotations
 
 import argparse
+import time
+from pathlib import Path
 
 import numpy as np
 
-from repro.fleet.analytics import AnalyticsConfig
+from repro.fleet.analytics import AnalyticsConfig, AnalyticsDriver
+from repro.fleet.checkpoint import FleetCheckpoint
 from repro.fleet.federated import FedConfig
+from repro.fleet.metrics import RoundMetrics
 from repro.fleet.scenarios import PLANES, SCENARIOS
 from repro.fleet.simulator import Backends, FleetSimulator, SimConfig
 
@@ -89,11 +93,110 @@ def build_parser() -> argparse.ArgumentParser:
                          "result, bit for bit")
     ap.add_argument("--warmup-ticks", type=int, default=16,
                     help="world ticks before the first analytics window")
+    # durable fleet state (repro.fleet.checkpoint)
+    ap.add_argument("--checkpoint-to", metavar="DIR", default=None,
+                    help="directory for durable checkpoints; one "
+                         "subdirectory round-NNNN per saved round")
+    ap.add_argument("--checkpoint-every", type=int, metavar="N", default=None,
+                    help="save a checkpoint after every N completed "
+                         "rounds/windows (requires --checkpoint-to)")
+    ap.add_argument("--restore-from", metavar="DIR", default=None,
+                    help="resume from a checkpoint directory: finishes any "
+                         "in-flight round, then runs --rounds more "
+                         "(workload/config come from the checkpoint)")
     return ap
 
 
+def _checkpoint_hook(ap: argparse.ArgumentParser, args, sim):
+    """Returns the on_round/on_window hook saving durable checkpoints
+    every N completed rounds, or None when checkpointing is off."""
+    if args.checkpoint_every is not None and args.checkpoint_to is None:
+        ap.error("--checkpoint-every requires --checkpoint-to")
+    if args.checkpoint_to is None:
+        return None
+    every = args.checkpoint_every if args.checkpoint_every is not None else 1
+    if every < 1:
+        ap.error("--checkpoint-every must be >= 1")
+    root = Path(args.checkpoint_to)
+
+    def hook(rnd: int, driver) -> None:
+        if (rnd + 1) % every == 0:
+            path = FleetCheckpoint.save(
+                sim, root / f"round-{rnd:04d}", driver=driver
+            )
+            print(f"checkpoint saved: {path}")
+
+    return hook
+
+
+def _resume(ap: argparse.ArgumentParser, args) -> None:
+    """--restore-from: rebuild the world, finish any in-flight round, run
+    --rounds more of whatever workload the checkpoint carries."""
+    sim, driver, rif = FleetCheckpoint.restore(args.restore_from)
+    if driver is None:
+        ap.error(f"checkpoint {args.restore_from} has no workload driver; "
+                 "nothing to resume")
+    hook = _checkpoint_hook(ap, args, sim)
+    analytics = isinstance(driver, AnalyticsDriver)
+    if rif is not None:
+        # finish the round that was mid-flight when the checkpoint was
+        # taken, recording its metrics row like the campaign loop does
+        online = len(sim.pool.online())
+        t0, tick0 = time.perf_counter(), sim.t
+        pub0, del0, drop0 = (
+            sim.broker.published, sim.broker.delivered, sim.broker.dropped
+        )
+        if analytics:
+            rec = driver.finish_window(rif)
+            rnd, participants, canceled = (
+                rif.window_id, rec.participants, rec.canceled
+            )
+            extra = {}
+        else:
+            rec = driver.finish_round(rif)
+            rnd, participants, canceled = (
+                rif.rnd, rec["participants"], rec["canceled"]
+            )
+            extra = {
+                "mean_client_loss": rec["mean_client_loss"],
+                "dist_to_optimum": rec["dist_to_optimum"],
+            }
+        sim.metrics.record(
+            RoundMetrics(
+                round=rnd,
+                online_at_start=online,
+                participants=participants,
+                canceled=canceled,
+                ticks=sim.t - tick0,
+                published=sim.broker.published - pub0,
+                delivered=sim.broker.delivered - del0,
+                dropped=sim.broker.dropped - drop0,
+                wall_s=time.perf_counter() - t0,
+                **extra,
+            )
+        )
+        if hook is not None:
+            hook(rnd, driver)
+    if analytics:
+        driver = sim.run_analytics(
+            driver.cfg, windows=args.rounds, driver=driver, on_window=hook
+        )
+        print(sim.metrics.format_table())
+        print(driver.format_table())
+    else:
+        driver = sim.run_federated(
+            driver.cfg, rounds=args.rounds, driver=driver, on_round=hook
+        )
+        print(sim.metrics.format_table())
+        print(f"aggregate checksum: {float(np.sum(driver.w)):.6f}")
+
+
 def main() -> None:
-    args = build_parser().parse_args()
+    ap = build_parser()
+    args = ap.parse_args()
+    if args.restore_from is not None:
+        _resume(ap, args)
+        return
     scenario = args.scenario or (
         "mixed" if args.workload == "analytics" else "road-grade"
     )
@@ -117,6 +220,7 @@ def main() -> None:
             ),
         )
     )
+    hook = _checkpoint_hook(ap, args, sim)
     if args.workload == "analytics":
         driver = sim.run_analytics(
             AnalyticsConfig(
@@ -130,6 +234,7 @@ def main() -> None:
             ),
             windows=args.rounds,
             warmup_ticks=args.warmup_ticks,
+            on_window=hook,
         )
         print(sim.metrics.format_table())
         print(driver.format_table())
@@ -152,6 +257,7 @@ def main() -> None:
         dim=args.dim,
         rounds=args.rounds,
         n_samples=16,
+        on_round=hook,
     )
     print(sim.metrics.format_table())
     print(f"aggregate checksum: {float(np.sum(driver.w)):.6f}")

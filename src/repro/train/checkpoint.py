@@ -15,41 +15,127 @@ results.
 """
 from __future__ import annotations
 
+import hashlib
+import io
 import json
-import pickle
 from pathlib import Path
 from typing import Any
 
-import jax
 import numpy as np
+
+#: on-disk blob format tag; bump when the layout changes
+BLOB_FORMAT = "npy-tree/1"
+
+
+def _render_npy(arr: np.ndarray) -> bytes:
+    """The exact bytes ``np.save`` would write — rendered in memory so
+    the content hash is computed from what lands on disk."""
+    buf = io.BytesIO()
+    np.save(buf, arr, allow_pickle=False)
+    return buf.getvalue()
+
+
+def _flatten(obj: Any, leaves: list[np.ndarray]) -> Any:
+    """JSON skeleton of a pytree of dict/list/tuple/None containers;
+    leaves are appended to ``leaves`` in skeleton order (dict keys
+    sorted, so the order is a pure function of the value)."""
+    if obj is None:
+        return {"t": "none"}
+    if isinstance(obj, dict):
+        keys = sorted(obj)
+        if not all(isinstance(k, str) for k in keys):
+            raise TypeError(f"BlobStore dict keys must be str, got {keys!r}")
+        return {"t": "dict", "k": keys,
+                "v": [_flatten(obj[k], leaves) for k in keys]}
+    if isinstance(obj, (list, tuple)):
+        return {"t": "list" if isinstance(obj, list) else "tuple",
+                "v": [_flatten(x, leaves) for x in obj]}
+    leaves.append(np.asarray(obj))
+    return {"t": "leaf", "i": len(leaves) - 1}
+
+
+def _unflatten(skel: Any, leaves: list[np.ndarray]) -> Any:
+    t = skel["t"]
+    if t == "none":
+        return None
+    if t == "dict":
+        return {k: _unflatten(v, leaves) for k, v in zip(skel["k"], skel["v"])}
+    if t == "list":
+        return [_unflatten(v, leaves) for v in skel["v"]]
+    if t == "tuple":
+        return tuple(_unflatten(v, leaves) for v in skel["v"])
+    if t == "leaf":
+        return leaves[skel["i"]]
+    raise ValueError(f"unknown skeleton node type {t!r}")
 
 
 class BlobStore:
-    """Content-addressed tensor blobs on disk."""
+    """Content-addressed tensor blobs on disk.
+
+    A blob is a JSON manifest (``{name}.json``) holding the container
+    skeleton plus one raw ``.npy`` file per leaf, named by the sha256 of
+    its bytes. Raw ``np.save`` bytes are a pure function of the array
+    (dtype + shape + data), so identical leaves dedup across blobs and
+    re-saving identical state writes identical files — pickled treedefs
+    (the old format) embedded class identities and made hashes drift
+    across runs.
+    """
 
     def __init__(self, root: str | Path):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
 
     def put(self, name: str, tree: Any) -> str:
-        leaves, treedef = jax.tree.flatten(tree)
-        path = self.root / f"{name}.npz"
-        np.savez(
-            path, **{f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+        leaves: list[np.ndarray] = []
+        skeleton = _flatten(tree, leaves)
+        entries = []
+        for leaf in leaves:
+            raw = _render_npy(leaf)
+            digest = hashlib.sha256(raw).hexdigest()
+            fname = f"{digest[:24]}.npy"
+            path = self.root / fname
+            if not path.exists():  # content-addressed: dedup identical leaves
+                path.write_bytes(raw)
+            entries.append({"file": fname, "sha256": digest})
+        manifest = {"format": BLOB_FORMAT, "skeleton": skeleton,
+                    "leaves": entries}
+        (self.root / f"{name}.json").write_text(
+            json.dumps(manifest, sort_keys=True, separators=(",", ":"))
         )
-        (self.root / f"{name}.treedef.pkl").write_bytes(pickle.dumps(treedef))
         return name
 
     def get(self, name: str) -> Any:
-        data = np.load(self.root / f"{name}.npz")
-        treedef = pickle.loads(
-            (self.root / f"{name}.treedef.pkl").read_bytes()
-        )
-        leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
-        return jax.tree.unflatten(treedef, leaves)
+        mpath = self.root / f"{name}.json"
+        if not mpath.exists():
+            raise FileNotFoundError(f"blob manifest missing: {mpath}")
+        try:
+            manifest = json.loads(mpath.read_text())
+        except ValueError as e:
+            raise ValueError(f"blob manifest corrupt: {mpath}: {e}") from e
+        fmt = manifest.get("format")
+        if fmt != BLOB_FORMAT:
+            raise ValueError(
+                f"blob {mpath} has format {fmt!r}, expected {BLOB_FORMAT!r}"
+            )
+        leaves = []
+        for entry in manifest["leaves"]:
+            lpath = self.root / entry["file"]
+            if not lpath.exists():
+                raise FileNotFoundError(
+                    f"blob {name!r} leaf missing: {lpath}"
+                )
+            raw = lpath.read_bytes()
+            digest = hashlib.sha256(raw).hexdigest()
+            if digest != entry["sha256"]:
+                raise ValueError(
+                    f"blob {name!r} leaf corrupt: {lpath} sha256 {digest} "
+                    f"!= recorded {entry['sha256']}"
+                )
+            leaves.append(np.load(io.BytesIO(raw), allow_pickle=False))
+        return _unflatten(manifest["skeleton"], leaves)
 
     def exists(self, name: str) -> bool:
-        return (self.root / f"{name}.npz").exists()
+        return (self.root / f"{name}.json").exists()
 
 
 class CheckpointManager:

@@ -1,0 +1,475 @@
+"""Durable fleet state: `FleetCheckpoint.save/restore` must be invisible
+to the simulation — `run(a+b) == run(a) -> save -> restore -> run(b)`
+bit-for-bit on aggregates, broker counters, participation/cancel/pump
+counts, consumed ticks, and signal-plane reads — across faults × churn ×
+stragglers × backends × {host, sharded} planes × {fedavg, analytics}
+workloads, including checkpoints taken mid-round with tasks in flight.
+Plus elastic resharding (8 devices -> 1/2/4) and the negative paths
+(corrupt manifest, missing blob, schema bump, forbidden overrides)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.fleet import Backends, FedConfig, FleetSimulator, SimConfig
+from repro.fleet.analytics import AnalyticsConfig, AnalyticsDriver
+from repro.fleet.checkpoint import (
+    SCHEMA_VERSION,
+    CheckpointError,
+    FleetCheckpoint,
+)
+from repro.train.checkpoint import BlobStore
+
+ENGINE = dict(engine="event", service="scheduler", churn="event")
+DENSE = dict(engine="dense", service="dense", churn="dense")
+
+GRID = {
+    "clean": {},
+    "faults": dict(p_drop=0.15, p_duplicate=0.05, max_delay=2),
+    "churn": dict(p_leave=0.05, p_return=0.3),
+    "stragglers": dict(straggler_fraction=0.25, straggler_period=8),
+    "everything": dict(
+        p_drop=0.15, p_duplicate=0.05, max_delay=2, p_leave=0.02,
+        p_return=0.3, straggler_fraction=0.25, straggler_period=8,
+    ),
+}
+
+FED = FedConfig(
+    local_steps=2, local_lr=0.2, deadline_fraction=0.7, deadline_pumps=48
+)
+ANA = AnalyticsConfig(deadline_fraction=0.7, deadline_pumps=32)
+
+
+def _cfg(backends, **overrides):
+    knobs = dict(n_clients=32, seed=17)
+    knobs.update(overrides)
+    return SimConfig(backends=Backends(**backends), **knobs)
+
+
+# --------------------------------------------------------------------- #
+# fingerprints: everything the golden contract pins down                 #
+# --------------------------------------------------------------------- #
+def _np_default(o):
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    if isinstance(o, np.generic):
+        return o.item()
+    raise TypeError(f"not fingerprintable: {o!r}")
+
+
+def _dump(fp) -> str:
+    # json round-trips float reprs exactly and renders NaN stably, so
+    # string equality is bit-for-bit equality (wall_s is never included)
+    return json.dumps(fp, default=_np_default, sort_keys=True)
+
+
+def _plane_probe(sim):
+    p = sim.plane
+    name = p.names[0]
+    rows = min(4, p.n_clients)
+    return {
+        "t": p.t,
+        "values": [float(p.read(i, name)) for i in range(rows)],
+        "window": [np.asarray(p.window(i, name, 8)).tolist()
+                   for i in range(rows)],
+    }
+
+
+def _fed_fp(sim, drv):
+    return {
+        "w": drv.w,
+        "history": drv.history,
+        "broker": [sim.broker.published, sim.broker.delivered,
+                   sim.broker.dropped],
+        "t": sim.t,
+        "plane": _plane_probe(sim),
+    }
+
+
+def _ana_fp(sim, drv):
+    return {
+        "history": [
+            {
+                "window_id": r.window_id, "participants": r.participants,
+                "canceled": r.canceled, "pumps": r.pumps, "count": r.count,
+                "mean": r.mean, "var": r.var, "hist": r.hist,
+                "q_values": r.q_values, "q_weights": r.q_weights,
+            }
+            for r in drv.history
+        ],
+        "broker": [sim.broker.published, sim.broker.delivered,
+                   sim.broker.dropped],
+        "t": sim.t,
+        "plane": _plane_probe(sim),
+    }
+
+
+# --------------------------------------------------------------------- #
+# the tentpole contract: run(a+b) == run(a) -> save/restore -> run(b)    #
+# --------------------------------------------------------------------- #
+def _golden_federated(tmp_path, backends, knobs, *, split=2, extra=2):
+    total = split + extra
+    simA = FleetSimulator(_cfg(backends, **knobs))
+    drvA = simA.run_federated(FED, dim=16, rounds=total, n_samples=8)
+    want = _dump(_fed_fp(simA, drvA))
+
+    simB = FleetSimulator(_cfg(backends, **knobs))
+    drvB = simB.run_federated(FED, dim=16, rounds=split, n_samples=8)
+    FleetCheckpoint.save(simB, tmp_path / "ck", driver=drvB)
+    simC, drvC, rif = FleetCheckpoint.restore(tmp_path / "ck")
+    assert rif is None
+    drvC = simC.run_federated(FED, rounds=extra, driver=drvC)
+    assert _dump(_fed_fp(simC, drvC)) == want
+
+
+def _golden_analytics(tmp_path, backends, knobs, *, split=2, extra=2):
+    total = split + extra
+    knobs = dict(knobs, scenario="mixed")
+    simA = FleetSimulator(_cfg(backends, **knobs))
+    drvA = simA.run_analytics(ANA, windows=total, warmup_ticks=6)
+    want = _dump(_ana_fp(simA, drvA))
+
+    simB = FleetSimulator(_cfg(backends, **knobs))
+    drvB = simB.run_analytics(ANA, windows=split, warmup_ticks=6)
+    FleetCheckpoint.save(simB, tmp_path / "ck", driver=drvB)
+    simC, drvC, rif = FleetCheckpoint.restore(tmp_path / "ck")
+    assert rif is None
+    drvC = simC.run_analytics(ANA, windows=extra, driver=drvC)
+    assert _dump(_ana_fp(simC, drvC)) == want
+
+
+@pytest.mark.parametrize("backends", [ENGINE, DENSE], ids=["engine", "dense"])
+@pytest.mark.parametrize("scenario", sorted(GRID))
+def test_golden_restore_federated(scenario, backends, tmp_path):
+    _golden_federated(tmp_path, backends, GRID[scenario])
+
+
+@pytest.mark.parametrize("backends", [ENGINE, DENSE], ids=["engine", "dense"])
+@pytest.mark.parametrize("scenario", ["clean", "everything"])
+def test_golden_restore_analytics(scenario, backends, tmp_path):
+    _golden_analytics(tmp_path, backends, GRID[scenario])
+
+
+@pytest.mark.parametrize("workload", ["federated", "analytics"])
+def test_golden_restore_sharded_plane(workload, tmp_path):
+    knobs = dict(GRID["everything"], n_clients=16, plane="sharded")
+    if workload == "federated":
+        _golden_federated(tmp_path, ENGINE, knobs)
+    else:
+        _golden_analytics(tmp_path, ENGINE, knobs)
+
+
+def test_checkpoint_at_tick_zero(tmp_path):
+    """Saving the freshly built world (before any round) restores to the
+    same full run — the boundary case a naive 'after round N' format
+    cannot express."""
+    knobs = GRID["everything"]
+    simA = FleetSimulator(_cfg(ENGINE, **knobs))
+    drvA = simA.run_federated(FED, dim=16, rounds=2, n_samples=8)
+    want = _dump(_fed_fp(simA, drvA))
+
+    simB = FleetSimulator(_cfg(ENGINE, **knobs))
+    FleetCheckpoint.save(simB, tmp_path / "ck")
+    simC, drvC, rif = FleetCheckpoint.restore(tmp_path / "ck")
+    assert drvC is None and rif is None
+    drvC = simC.run_federated(FED, dim=16, rounds=2, n_samples=8)
+    assert _dump(_fed_fp(simC, drvC)) == want
+
+
+# --------------------------------------------------------------------- #
+# mid-round: tasks in flight when the world freezes                      #
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backends", [ENGINE, DENSE], ids=["engine", "dense"])
+@pytest.mark.parametrize("steps", [0, 3])
+def test_midround_checkpoint_federated(backends, steps, tmp_path):
+    knobs = GRID["everything"]
+    simA = FleetSimulator(_cfg(backends, **knobs))
+    drvA = simA.run_federated(FED, dim=16, rounds=3, n_samples=8)
+    want = _dump(_fed_fp(simA, drvA))
+
+    simB = FleetSimulator(_cfg(backends, **knobs))
+    drvB = simB.run_federated(FED, dim=16, rounds=2, n_samples=8)
+    rif = drvB.start_round(2, simB.tick)
+    for _ in range(steps):
+        rif.pump.step()
+    FleetCheckpoint.save(simB, tmp_path / "ck", driver=drvB, rif=rif)
+    simC, drvC, rifC = FleetCheckpoint.restore(tmp_path / "ck")
+    assert rifC is not None and rifC.rnd == 2
+    # step() goes idempotent once the round closes, so compare against
+    # the live pump's actual progress, not the requested step count
+    assert rifC.pump.pumps == rif.pump.pumps
+    assert rifC.pump.closed == rif.pump.closed
+    drvC.finish_round(rifC)
+    got = _fed_fp(simC, drvC)
+    # metrics rows for the interrupted round are recorded by the campaign
+    # loop, not finish_round — compare the driver-level observables
+    assert _dump(got["history"]) == _dump([r for r in drvA.history])
+    assert _dump(got["w"]) == _dump(drvA.w)
+    assert got["t"] == simA.t and _dump(got["plane"]) == _dump(
+        _plane_probe(simA)
+    )
+    assert got["broker"] == [simA.broker.published, simA.broker.delivered,
+                             simA.broker.dropped]
+    assert _dump(got) == want
+
+
+@pytest.mark.parametrize("backends", [ENGINE, DENSE], ids=["engine", "dense"])
+def test_midround_checkpoint_analytics(backends, tmp_path):
+    knobs = dict(GRID["everything"], scenario="mixed")
+    simA = FleetSimulator(_cfg(backends, **knobs))
+    drvA = simA.run_analytics(ANA, windows=3, warmup_ticks=6)
+    want = _dump(_ana_fp(simA, drvA))
+
+    simB = FleetSimulator(_cfg(backends, **knobs))
+    drvB = simB.run_analytics(ANA, windows=2, warmup_ticks=6)
+    wif = drvB.start_window(2, simB.tick)
+    for _ in range(3):
+        wif.pump.step()
+    FleetCheckpoint.save(simB, tmp_path / "ck", driver=drvB, rif=wif)
+    simC, drvC, wifC = FleetCheckpoint.restore(tmp_path / "ck")
+    assert isinstance(drvC, AnalyticsDriver)
+    assert wifC is not None and wifC.window_id == 2
+    drvC.finish_window(wifC)
+    assert _dump(_ana_fp(simC, drvC)) == want
+
+
+# --------------------------------------------------------------------- #
+# elastic resharding: save on 8 devices, restore on 1/2/4                #
+# --------------------------------------------------------------------- #
+def _device_count() -> int:
+    import jax
+
+    return jax.device_count()
+
+
+@pytest.mark.skipif(
+    _device_count() < 8,
+    reason="elastic resharding needs 8 simulated devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+@pytest.mark.parametrize("devices", [1, 2, 4])
+def test_elastic_restore_onto_fewer_devices(devices, tmp_path):
+    """A checkpoint taken with the plane sharded over 8 devices restores
+    onto 1/2/4 and stays bit-for-bit with the host oracle — resharding
+    re-pads the ring and re-places device arrays, reads are unchanged."""
+    import jax
+
+    from repro.sharding.fleet import client_mesh
+
+    knobs = dict(GRID["everything"], n_clients=16)
+    host = FleetSimulator(_cfg(ENGINE, plane="host", **knobs))
+    drvH = host.run_federated(FED, dim=16, rounds=4, n_samples=8)
+    want = _dump(_fed_fp(host, drvH))
+
+    sim = FleetSimulator(_cfg(ENGINE, plane="sharded", **knobs))
+    assert sim.plane.devices == 8
+    drv = sim.run_federated(FED, dim=16, rounds=2, n_samples=8)
+    FleetCheckpoint.save(sim, tmp_path / "ck", driver=drv)
+
+    mesh = client_mesh(jax.devices()[:devices])
+    simR, drvR, _ = FleetCheckpoint.restore(tmp_path / "ck", mesh=mesh)
+    assert simR.plane.devices == devices
+    # plane parity right at the restore point, before any further tick
+    assert _dump(_plane_probe(simR)) == _dump(_plane_probe(sim))
+    drvR = simR.run_federated(FED, rounds=2, driver=drvR)
+    assert _dump(_fed_fp(simR, drvR)) == want
+
+
+def test_mesh_requires_a_sharded_checkpoint(tmp_path):
+    from repro.sharding.fleet import client_mesh
+
+    sim = FleetSimulator(_cfg(ENGINE, n_clients=8))
+    FleetCheckpoint.save(sim, tmp_path / "ck")
+    with pytest.raises(CheckpointError, match="mesh="):
+        FleetCheckpoint.restore(tmp_path / "ck", mesh=client_mesh())
+
+
+# --------------------------------------------------------------------- #
+# negative paths: every failure names the file/field, nothing partial    #
+# --------------------------------------------------------------------- #
+@pytest.fixture()
+def saved(tmp_path):
+    sim = FleetSimulator(_cfg(ENGINE, n_clients=8, **GRID["faults"]))
+    drv = sim.run_federated(FED, dim=8, rounds=1, n_samples=4)
+    FleetCheckpoint.save(sim, tmp_path / "ck", driver=drv)
+    return tmp_path / "ck"
+
+
+def test_restore_missing_manifest(tmp_path):
+    with pytest.raises(CheckpointError, match="manifest missing") as ei:
+        FleetCheckpoint.restore(tmp_path / "nope")
+    assert str(tmp_path / "nope" / "manifest.json") in str(ei.value)
+
+
+def test_restore_corrupt_manifest(saved):
+    (saved / "manifest.json").write_text("{not json")
+    with pytest.raises(CheckpointError, match="manifest corrupt") as ei:
+        FleetCheckpoint.restore(saved)
+    assert "manifest.json" in str(ei.value)
+
+
+def test_restore_schema_version_bump(saved):
+    mpath = saved / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["schema"] = SCHEMA_VERSION + 1
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(
+        CheckpointError,
+        match=rf"schema version {SCHEMA_VERSION + 1}.*reads {SCHEMA_VERSION}",
+    ) as ei:
+        FleetCheckpoint.restore(saved)
+    assert "manifest.json" in str(ei.value)
+
+
+def test_restore_wrong_format_tag(saved):
+    mpath = saved / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    manifest["format"] = "something-else"
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(CheckpointError, match="format 'something-else'"):
+        FleetCheckpoint.restore(saved)
+
+
+def test_restore_missing_blob_leaf(saved):
+    leaf = sorted((saved / "arrays").glob("*.npy"))[0]
+    leaf.unlink()
+    with pytest.raises(CheckpointError, match="leaf missing") as ei:
+        FleetCheckpoint.restore(saved)
+    assert leaf.name in str(ei.value)
+
+
+def test_restore_corrupt_blob_leaf(saved):
+    leaf = sorted((saved / "arrays").glob("*.npy"))[0]
+    leaf.write_bytes(b"\x93NUMPY garbage")
+    with pytest.raises(CheckpointError, match="sha256"):
+        FleetCheckpoint.restore(saved)
+
+
+def test_structural_overrides_are_rejected(tmp_path):
+    """A sharded checkpoint cannot be restored as plane=host by override
+    — the saved device ring has no host twin; mesh= is the supported way
+    to change the device layout."""
+    sim = FleetSimulator(_cfg(ENGINE, n_clients=8, plane="sharded"))
+    FleetCheckpoint.save(sim, tmp_path / "ck")
+    with pytest.raises(CheckpointError, match=r"'plane'.*mesh=") as ei:
+        FleetCheckpoint.restore(
+            tmp_path / "ck", config_overrides={"plane": "host"}
+        )
+    assert "manifest.json" in str(ei.value)
+    with pytest.raises(CheckpointError, match="'n_clients'"):
+        FleetCheckpoint.restore(
+            tmp_path / "ck", config_overrides={"n_clients": 16}
+        )
+
+
+def test_fault_overrides_are_allowed(saved):
+    """Non-structural knobs may deliberately diverge on restore — e.g.
+    replaying the same world under heavier faults."""
+    sim, drv, _ = FleetCheckpoint.restore(
+        saved, config_overrides={"p_drop": 0.5}
+    )
+    assert sim.cfg.p_drop == 0.5
+    sim.run_federated(FED, rounds=1, driver=drv)  # still runs
+
+
+def test_save_rejects_rif_without_driver(tmp_path):
+    sim = FleetSimulator(_cfg(ENGINE, n_clients=8))
+    with pytest.raises(CheckpointError, match="without its driver"):
+        FleetCheckpoint.save(sim, tmp_path / "ck", rif=object())
+
+
+# --------------------------------------------------------------------- #
+# BlobStore: deterministic, content-addressed, self-verifying            #
+# --------------------------------------------------------------------- #
+def test_blobstore_roundtrip_is_deterministic(tmp_path):
+    tree = {
+        "w": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "nested": {"m": np.eye(2), "none": None},
+        "seq": [np.float64(1.5), (np.int32(2), np.arange(3))],
+    }
+    store = BlobStore(tmp_path / "blobs")
+    store.put("state", tree)
+    first = (tmp_path / "blobs" / "state.json").read_text()
+    store.put("state", tree)  # identical re-save writes identical bytes
+    assert (tmp_path / "blobs" / "state.json").read_text() == first
+
+    out = store.get("state")
+    assert np.array_equal(out["w"], tree["w"])
+    assert np.array_equal(out["nested"]["m"], np.eye(2))
+    assert out["nested"]["none"] is None
+    assert isinstance(out["seq"][1], tuple)
+    assert np.array_equal(out["seq"][1][1], np.arange(3))
+
+
+def test_blobstore_dedups_identical_leaves(tmp_path):
+    store = BlobStore(tmp_path / "blobs")
+    a = np.ones((4, 4), np.float32)
+    store.put("x", [a, a.copy(), {"again": a}])
+    assert len(list((tmp_path / "blobs").glob("*.npy"))) == 1
+
+
+# --------------------------------------------------------------------- #
+# property test: random knobs + random checkpoint tick (graceful skip)   #
+# --------------------------------------------------------------------- #
+def _property_golden(seed, n, p_drop, p_dup, delay, p_leave, p_return,
+                     frac, split, tmp_path):
+    knobs = dict(
+        n_clients=n, seed=seed, p_drop=p_drop, p_duplicate=p_dup,
+        max_delay=delay, p_leave=p_leave, p_return=p_return,
+        straggler_fraction=frac,
+    )
+    fed = FedConfig(
+        local_steps=1, local_lr=0.2, deadline_fraction=0.7,
+        deadline_pumps=24,
+    )
+    total = 3
+    simA = FleetSimulator(_cfg(ENGINE, **knobs))
+    drvA = simA.run_federated(fed, dim=8, rounds=total, n_samples=4)
+    want = _dump(_fed_fp(simA, drvA))
+
+    simB = FleetSimulator(_cfg(ENGINE, **knobs))
+    drvB = None
+    if split > 0:
+        drvB = simB.run_federated(fed, dim=8, rounds=split, n_samples=4)
+    ck = tmp_path / f"ck-{seed}-{split}"
+    FleetCheckpoint.save(simB, ck, driver=drvB)
+    simC, drvC, _ = FleetCheckpoint.restore(ck)
+    if drvC is None:
+        drvC = simC.run_federated(fed, dim=8, rounds=total, n_samples=4)
+    elif total - split > 0:
+        drvC = simC.run_federated(fed, rounds=total - split, driver=drvC)
+    assert _dump(_fed_fp(simC, drvC)) == want
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+except ImportError:  # graceful skip — hypothesis is optional
+    @pytest.mark.skip(reason="property tests need hypothesis")
+    def test_random_worlds_restore_bit_for_bit():
+        pass
+else:
+    @settings(
+        max_examples=10,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(
+        seed=st.integers(0, 2**16),
+        n=st.integers(4, 16),
+        p_drop=st.floats(0.0, 0.3),
+        p_dup=st.floats(0.0, 0.2),
+        delay=st.integers(0, 3),
+        p_leave=st.floats(0.0, 0.1),
+        p_return=st.floats(0.0, 0.5),
+        frac=st.floats(0.0, 0.5),
+        split=st.integers(0, 3),  # includes tick 0 and the final round
+    )
+    def test_random_worlds_restore_bit_for_bit(
+        seed, n, p_drop, p_dup, delay, p_leave, p_return, frac, split,
+        tmp_path_factory,
+    ):
+        _property_golden(
+            seed, n, p_drop, p_dup, delay, p_leave, p_return, frac, split,
+            tmp_path_factory.mktemp("golden"),
+        )
