@@ -56,6 +56,14 @@ Eight sections, CSV rows like the rest of the harness:
   >= 5 FedAvg rounds under a seeded lossy-broker schedule with stragglers,
   reporting clients/sec. In full (non ``--fast``) mode the run is repeated
   with the same seed and the final aggregates must match bit-for-bit.
+* ``fleet/scale_*`` — the ISSUE-9 scaling curve: whole-world build cost,
+  mostly-idle tick throughput (client-ticks/sec via the calendar-queue
+  service), and the measured `memory_report` bytes/client at N in
+  {1k, 10k, 100k}. The guard is structural, not a timing race: the
+  columnar arena's per-row footprint must undercut an object-per-vehicle
+  facsimile (one Python dict of the same seven control-plane scalars per
+  client) by >= 3x in BOTH modes — `__slots__` or column regressions
+  show up as bytes, not noise. ``--curve`` prints only this section.
 
 Guarded timings are **best-of-k** (k >= 3): minima are far more stable
 than medians on contended shared CI runners, so the guards catch code
@@ -133,6 +141,17 @@ GROW_TARGET_SPEEDUP = 3.0
 #: section's wall time; 12 fast joins (12 vs 2 recompiles) already shows
 #: the O(N)-vs-O(log N) gap without burning half a minute of CI smoke
 GROW_JOINS_FAST, GROW_JOINS = 12, 32
+#: the ISSUE-9 scaling curve — N=100k stays in ``--fast`` too (the build
+#: is ~7s and 20 mostly-idle calendar ticks are ~0.15s, so the campaign
+#: headline rides free in the CI smoke job)
+SCALE_SIZES = (1_000, 10_000, 100_000)
+SCALE_TICKS = 20
+#: mostly-idle: ~N/SCALE_RESYNC clients dial in per tick
+SCALE_RESYNC = 64
+#: structural floor for the columnar arena vs one Python dict of the same
+#: seven control-plane scalars per vehicle — holds in BOTH modes (it is a
+#: bytes ratio, immune to runner throttling)
+SCALE_COLUMNS_ADVANTAGE = 3.0
 
 
 def _synthetic_msgs(n: int, seed: int = 0) -> list[dict]:
@@ -615,6 +634,86 @@ def checkpoint_rows(
     ], speedups
 
 
+def _object_per_vehicle_facsimile(n: int) -> list[dict]:
+    """What the pre-columnarization control plane kept per client: one
+    Python mapping holding the seven per-vehicle scalars that now live as
+    rows of the shared `FleetColumns` arena. Distinct int values keep the
+    `deep_sizeof` memoizer from sharing interned small ints across
+    clients, which would flatter the old layout."""
+    return [
+        dict(
+            logical_clock=1000 + i, online=True, registered=False,
+            client_ts=2000 + i, unacked=0, runnable=False, straggler=False,
+        )
+        for i in range(n)
+    ]
+
+
+def scale_rows(
+    fast: bool,
+) -> tuple[list[tuple[str, float, str]], dict[int, float]]:
+    """The fleet-size scaling curve at N in {1k, 10k, 100k}: whole-world
+    build cost (plane + columnar arena + calendar service, one sample —
+    the 100k build is seconds, not microseconds), mostly-idle tick
+    throughput in client-ticks/sec (best-of-k over ``SCALE_TICKS``-tick
+    loops), and the measured `memory_report` bytes/client. The guarded
+    ratio is structural: arena bytes/row vs `deep_sizeof` of an
+    object-per-vehicle facsimile — a bytes comparison, so the >= 3x floor
+    holds in both modes regardless of runner speed."""
+    from repro.core.columns import deep_sizeof
+    from repro.fleet import Backends, FleetSimulator, SimConfig
+
+    reps = 3
+    rows = []
+    arena_row_bytes = 0.0
+    for n in SCALE_SIZES:
+        t0 = time.perf_counter()
+        sim = FleetSimulator(
+            SimConfig(
+                n_clients=n, seed=3, p_leave=0.0005, p_return=0.2,
+                straggler_fraction=0.1, resync_period=SCALE_RESYNC,
+                signal_history=8, backends=Backends(service="calendar"),
+            )
+        )
+        t_build = (time.perf_counter() - t0) * 1e6
+
+        def tick_loop() -> None:
+            for _ in range(SCALE_TICKS):
+                sim.tick()
+
+        t_tick = _time(tick_loop, reps) / SCALE_TICKS
+        report = sim.memory_report()
+        arena_row_bytes = sim.columns.nbytes() / sim.columns.capacity
+        rows.append(
+            (
+                f"fleet/scale_build_N{n}",
+                t_build,
+                "plane + columnar arena + calendar lanes, single sample",
+            )
+        )
+        rows.append(
+            (
+                f"fleet/scale_tick_N{n}",
+                t_tick,
+                f"{n / (t_tick / 1e6):,.0f} client-ticks/s mostly idle, "
+                f"{report['bytes_per_client']:,.0f} B/client end to end",
+            )
+        )
+    n_fac = 4096
+    facsimile = deep_sizeof(_object_per_vehicle_facsimile(n_fac)) / n_fac
+    advantage = facsimile / arena_row_bytes
+    n_max = max(SCALE_SIZES)
+    rows.append(
+        (
+            f"fleet/scale_arena_row_B_N{n_max}",
+            arena_row_bytes,
+            f"{advantage:.1f}x leaner than object-per-vehicle "
+            f"({facsimile:.0f} B/client of Python scalars)",
+        )
+    )
+    return rows, {n_max: advantage}
+
+
 def simulator_rows(fast: bool) -> list[tuple[str, float, str]]:
     from repro.fleet import FedConfig, FleetSimulator, SimConfig
 
@@ -671,7 +770,8 @@ def rows(
 ) -> tuple[list[tuple[str, float, str]], dict[str, dict[int, float]]]:
     """All fleet rows plus the vectorization speedups (for the CI guard),
     keyed by section: ``{"agg": {N: x}, "plane": {N: x}, "service":
-    {N: x}, "grow": {joins: x}}``."""
+    {N: x}, "grow": {joins: x}, "ckpt": {N: budget_headroom},
+    "scale": {N: columnar_bytes_advantage}}``."""
     agg, agg_speedups = _measure_guarded(aggregation_rows, _agg_guard, fast)
     plane, plane_speedups = _measure_guarded(
         signal_plane_rows, _plane_guard, fast
@@ -686,6 +786,7 @@ def rows(
     sketch, sketch_speedups = _measure_guarded(sketch_rows, _sketch_guard, fast)
     grow, grow_speedups = _measure_guarded(plane_growth_rows, _grow_guard, fast)
     ckpt, ckpt_speedups = _measure_guarded(checkpoint_rows, _ckpt_guard, fast)
+    scale, scale_speedups = _measure_guarded(scale_rows, _scale_guard, fast)
     guards = {
         "agg": agg_speedups,
         "plane": plane_speedups,
@@ -695,10 +796,11 @@ def rows(
         "sketch": sketch_speedups,
         "grow": grow_speedups,
         "ckpt": ckpt_speedups,
+        "scale": scale_speedups,
     }
     return (
         agg + plane + sharded + service + engine + sketch + grow + ckpt
-        + simulator_rows(fast),
+        + scale + simulator_rows(fast),
         guards,
     )
 
@@ -830,6 +932,22 @@ def _ckpt_guard(speedups: dict[int, float], *, fast: bool) -> str | None:
     return None
 
 
+def _scale_guard(speedups: dict[int, float], *, fast: bool) -> str | None:
+    """A bytes ratio, not a timing: the columnar arena's per-row footprint
+    vs one Python dict of the same scalars per vehicle. Structural, so
+    the floor holds in BOTH modes — tripping it means per-client state
+    grew back into Python objects (a dropped ``__slots__``, a scalar
+    moved out of the arena), not that the runner was slow."""
+    n_max = max(speedups)
+    if speedups[n_max] < SCALE_COLUMNS_ADVANTAGE:
+        return (
+            f"columnar arena only {speedups[n_max]:.1f}x leaner than the "
+            f"object-per-vehicle facsimile at N={n_max} "
+            f"(< {SCALE_COLUMNS_ADVANTAGE:.0f}x floor)"
+        )
+    return None
+
+
 _GUARDS = {
     "agg": _agg_guard,
     "plane": _plane_guard,
@@ -839,6 +957,7 @@ _GUARDS = {
     "sketch": _sketch_guard,
     "grow": _grow_guard,
     "ckpt": _ckpt_guard,
+    "scale": _scale_guard,
 }
 
 
@@ -858,9 +977,19 @@ def check_guard(
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="CI smoke sizes")
+    ap.add_argument(
+        "--curve",
+        action="store_true",
+        help="only the fleet-size scaling curve (build cost, client-ticks/s "
+        "and bytes/client at N in {1k, 10k, 100k})",
+    )
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    all_rows, speedups = rows(args.fast)
+    if args.curve:
+        all_rows, scale_speedups = scale_rows(args.fast)
+        speedups = {"scale": scale_speedups}
+    else:
+        all_rows, speedups = rows(args.fast)
     for name, us, derived in all_rows:
         print(f"{name},{us:.2f},{derived}")
     err = check_guard(speedups, fast=args.fast)

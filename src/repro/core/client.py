@@ -31,6 +31,7 @@ from typing import Any, Callable
 
 from repro.core import sandbox
 from repro.core.broker import Broker, Subscription, client_clock_topic
+from repro.core.columns import FleetColumns
 from repro.core.documents import Result, TaskStatus
 from repro.core.faults import NetworkError
 from repro.core.payload_api import PayloadContext
@@ -38,7 +39,7 @@ from repro.core.signals import SignalBroker, SignalHandler
 from repro.core.statestore import ClientStateSnapshot
 
 
-@dataclass
+@dataclass(slots=True)
 class LocalDisk:
     """Durable client-side storage (survives restarts)."""
 
@@ -56,7 +57,7 @@ class LocalDisk:
     done: set[str] = field(default_factory=set)
 
 
-@dataclass
+@dataclass(slots=True)
 class _LocalTask:
     """An entry of the sync loop's `localTasks` map."""
 
@@ -68,6 +69,20 @@ class _LocalTask:
 
 
 class EdgeClient:
+    """Slotted (no per-instance `__dict__`): at 100k+ vehicles the sync
+    loop's Python-object overhead is the memory bill, so the layout is
+    fixed and the fleet-wide scalars (`ts`, registration, unacked count)
+    can live in a shared `FleetColumns` arena via `bind_columns` — one
+    numpy element per client instead of a dict slot per object."""
+
+    __slots__ = (
+        "client_id", "server", "broker", "disk", "signal_handler",
+        "_thread_containers", "_limits", "_metadata",
+        "tasks", "local_tasks", "syncing_state", "dirty_state",
+        "_ops", "_container_events", "_sub", "_wake_cb", "rpc_failures",
+        "_cols", "_row", "_ts_local", "_registered_local",
+    )
+
     def __init__(
         self,
         client_id: str,
@@ -91,6 +106,12 @@ class EdgeClient:
         self._limits = limits
         self._metadata = metadata or {}
 
+        # --- columnar arena binding (optional; see bind_columns) ------- #
+        self._cols: FleetColumns | None = None
+        self._row = -1
+        self._ts_local = 0
+        self._registered_local = True
+
         # --- Algorithm 1 state ---------------------------------------- #
         self.ts = 0
         self.tasks: tuple = ()  # TaskSyncInfo tuple from last snapshot
@@ -110,6 +131,51 @@ class EdgeClient:
         #: spawned, a broker notification lands, a container emits)
         self._wake_cb: Callable[[], None] | None = None
         self.rpc_failures = 0
+
+    # ------------------------------------------------------------------ #
+    # columnar arena binding                                             #
+    # ------------------------------------------------------------------ #
+    def bind_columns(self, cols: FleetColumns, row: int | None = None) -> None:
+        """Move this client's scalar sync state (logical timestamp,
+        registration flag, unacked-result count) into the shared arena.
+        The attribute API is unchanged; reads/writes hit numpy columns."""
+        r = cols.row_for(self.client_id) if row is None else row
+        cols.client_ts[r] = self.ts
+        cols.registered[r] = self._registered
+        cols.unacked[r] = sum(len(v) for v in self.disk.unacked.values())
+        self._cols, self._row = cols, r
+
+    @property
+    def ts(self) -> int:
+        if self._cols is not None:
+            return int(self._cols.client_ts[self._row])
+        return self._ts_local
+
+    @ts.setter
+    def ts(self, value: int) -> None:
+        if self._cols is not None:
+            self._cols.client_ts[self._row] = value
+        else:
+            self._ts_local = int(value)
+
+    @property
+    def _registered(self) -> bool:
+        if self._cols is not None:
+            return bool(self._cols.registered[self._row])
+        return self._registered_local
+
+    @_registered.setter
+    def _registered(self, value: bool) -> None:
+        if self._cols is not None:
+            self._cols.registered[self._row] = value
+        else:
+            self._registered_local = bool(value)
+
+    def _recount_unacked(self) -> None:
+        if self._cols is not None:
+            self._cols.unacked[self._row] = sum(
+                len(v) for v in self.disk.unacked.values()
+            )
 
     # ------------------------------------------------------------------ #
     # lifecycle                                                          #
@@ -136,7 +202,7 @@ class EdgeClient:
             self._spawn(("fetch_state",))
 
     def _ensure_registered(self) -> None:
-        if not getattr(self, "_registered", True):
+        if not self._registered:
             self.server.register_client(self.client_id, self._metadata)
             self._registered = True
 
@@ -299,6 +365,8 @@ class EdgeClient:
             self.disk.unacked.setdefault(task_id, []).append(
                 Result.create(task_id, seq, result_value)
             )
+            if self._cols is not None:
+                self._cols.unacked[self._row] += 1
         if status is not None:
             self.disk.terminal[task_id] = (status, log)
             lt = self.local_tasks.get(task_id)
@@ -374,6 +442,7 @@ class EdgeClient:
                 self.disk.unacked.pop(task_id, None)
                 self.disk.next_seq.pop(task_id, None)
                 self.disk.done.add(task_id)
+        self._recount_unacked()
 
     def _op_sync_containers(self, s: ClientStateSnapshot) -> None:
         """Start/stop containers to match the active task set."""

@@ -59,7 +59,7 @@ def _json_canonical(value: Any) -> str:
     return json.dumps(value, sort_keys=True, separators=(",", ":"), default=str)
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class Payload:
     """Immutable code document. Immutability (paper §3.4.1) is what makes
     client-side payload caching sound: the digest is the cache key."""
@@ -77,7 +77,7 @@ class Payload:
         return Payload(payload_id=new_id("pay"), source=source, name=name)
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class Parameters:
     """Optional JSON-serializable value readable by the payload via the
     client library (paper §4.1) — e.g. distribute a model to many clients
@@ -97,7 +97,7 @@ class Parameters:
         )
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class Task:
     """Client-specific unit of work. `results_count` mirrors the paper's
     sync-state summary ("each task has an ID and the number of results
@@ -124,7 +124,7 @@ class InvalidTransition(Exception):
         self.src, self.dst = src, dst
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class Assignment:
     """Groups related tasks; every task needs an assignment (paper §5.2.1)."""
 
@@ -133,7 +133,7 @@ class Assignment:
     task_ids: tuple[str, ...]
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class Result:
     """A single published result for a task. `seq` is the per-task result
     sequence number (dense, starting at 0) — it is what makes result upload

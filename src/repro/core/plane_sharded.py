@@ -50,8 +50,10 @@ class ShardedSignalPlane(FleetSignalPlane):
 
     ``step_builder(capacity)`` must return the scenario's *pure* jax step
     (`t -> (capacity, n_signals)` float32) — `Scenario.step_fn` is the
-    canonical source. Trace/CSV playback planes stay host-only: they are
-    bounded by their materialized trace, not by compute.
+    canonical source. Materialized traces stay host-only
+    (`FleetSignalPlane.from_trace`); CSV playback works here too via
+    `from_csv_fleet`, which streams one host row per tick into the
+    sharded ring instead of materializing the trace.
     """
 
     def __init__(
@@ -69,6 +71,9 @@ class ShardedSignalPlane(FleetSignalPlane):
         self._growth = max(1.0, float(growth))
         self.mesh = mesh if mesh is not None else fleet_sharding.client_mesh()
         self._step_builder = step_builder
+        #: host row source for CSV playback (`from_csv_fleet`); None for
+        #: scenario planes, whose ticks are fully device-resident
+        self._feed = None
         self._hist_cap = max(1, int(history))
         self.t = 0
         self.n_clients = int(n_clients)
@@ -136,6 +141,22 @@ class ShardedSignalPlane(FleetSignalPlane):
         )
         self._values_fn = jax.jit(step, out_shardings=vsh)
 
+        def feed_tick(t, vals, hist, offline):
+            # host-fed variant of tick(): the row arrives device-placed
+            # from the CSV stream instead of from the scenario step
+            row = jnp.where(offline[:, None], jnp.nan, vals)
+            hist = jax.lax.dynamic_update_slice_in_dim(
+                hist, row[None], t % hist_cap, axis=0
+            )
+            return vals, hist
+
+        self._feed_fn = jax.jit(
+            feed_tick,
+            in_shardings=(rep, vsh, rsh, msh),
+            out_shardings=(vsh, rsh),
+            donate_argnums=(2,),
+        )
+
         def init_ring(vals):
             ring = jnp.full((hist_cap, cap, vals.shape[1]), jnp.nan, jnp.float32)
             return ring.at[0].set(vals)
@@ -200,12 +221,29 @@ class ShardedSignalPlane(FleetSignalPlane):
     def step(self) -> None:
         """Advance every device's row shard: ONE sharded jit call fusing
         the scenario step with the in-place (donated) ring slot write. No
-        host transfer happens here — mirrors sync lazily on read."""
+        host transfer happens here — mirrors sync lazily on read.
+
+        CSV-fed planes (`from_csv_fleet`) pull the next streamed host
+        row instead, pad it to capacity, and run the same donated ring
+        write — one host->device transfer per tick, never a trace."""
         self.t += 1
         self._sync_mask()
-        self._dvalues, self._dhist = self._tick_fn(
-            jnp.int32(self.t), self._dhist, self._doffline
-        )
+        if self._feed is not None:
+            row = self._feed.series(self.t)
+            padded = np.full(
+                (self._capacity, len(self.names)), np.nan, np.float32
+            )
+            padded[: row.shape[0]] = row
+            drow = jax.device_put(
+                padded, fleet_sharding.values_sharding(self.mesh)
+            )
+            self._dvalues, self._dhist = self._feed_fn(
+                jnp.int32(self.t), drow, self._dhist, self._doffline
+            )
+        else:
+            self._dvalues, self._dhist = self._tick_fn(
+                jnp.int32(self.t), self._dhist, self._doffline
+            )
         self._hist_len = min(self._hist_len + 1, self._hist_cap)
         self._values_dirty = True
         self._hist_dirty = True
@@ -272,6 +310,12 @@ class ShardedSignalPlane(FleetSignalPlane):
         """A new vehicle joins: amortized O(1) jitted ring-column init
         within spare capacity; past capacity the arrays double (rounded to
         the device count). Returns the new row index."""
+        if self._feed is not None:
+            # match the host CSV plane: a fixed trace defines the fleet
+            raise ValueError(
+                "this plane has a fixed fleet size (CSV playback); "
+                "construct it via a scenario to support add_client"
+            )
         i = self.n_clients
         self._ensure_capacity(i + 1)
         self.n_clients = i + 1
@@ -295,8 +339,39 @@ class ShardedSignalPlane(FleetSignalPlane):
         )
 
     @classmethod
-    def from_csv_fleet(cls, *args, **kwargs):
-        raise NotImplementedError(
-            "sharded planes are scenario-backed; CSV playback stays on "
-            "the host plane (FleetSignalPlane.from_csv_fleet)"
-        )
+    def from_csv_fleet(
+        cls,
+        csv_texts: Sequence[str],
+        *,
+        history: int = 256,
+        mesh: Mesh | None = None,
+    ) -> "ShardedSignalPlane":
+        """CSV playback on the sharded layout, through the same
+        constant-memory `CsvFleetStream` the host plane uses: each tick
+        streams ONE `(n_vehicles, n_signals)` host row, pads it to the
+        device-rounded capacity, and feeds the donated ring write — the
+        full trace is never materialized on host or device. Reads are
+        bit-for-bit with `FleetSignalPlane.from_csv_fleet` (the parity
+        test in `tests/test_signal_plane.py` pins it)."""
+        from repro.core.signals import CsvFleetStream
+
+        stream = CsvFleetStream(csv_texts)
+        n = len(csv_texts)
+        names = stream.names
+        row0 = np.array(stream.series(0), np.float32, copy=True)
+
+        def step_builder(cap):
+            first = np.full((cap, len(names)), np.nan, np.float32)
+            first[:n] = row0
+            const = jnp.asarray(first)
+
+            def step(t):
+                # only evaluated at construction (t=0): every later tick
+                # is host-fed through `step()`'s feed branch
+                return const
+
+            return step
+
+        plane = cls(names, n, step_builder, history=history, mesh=mesh)
+        plane._feed = stream
+        return plane

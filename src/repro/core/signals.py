@@ -126,13 +126,13 @@ class CsvSignalBroker(ScriptedSignalBroker):
         super().__init__({k: iter(v) for k, v in columns.items()})
 
 
-def parse_signal_csv(csv_text: str) -> dict[str, list[float | None]]:
-    """Parse a signals CSV into tick-aligned columns.
-
-    Blank cells become ``None`` ("no observation this tick" — hold the
-    previous value). A row with more or fewer cells than the header, or a
-    cell that is not a number, raises ``ValueError`` naming the column and
-    the 1-based data row.
+def iter_signal_csv(csv_text: str) -> Iterator[list]:
+    """Stream a signals CSV: yields the stripped header row first, then
+    one ``list[float | None]`` per data tick (blank cells -> ``None``,
+    header-aligned). This is the single source of CSV validation — a row
+    with more or fewer cells than the header, or a non-numeric cell,
+    raises ``ValueError`` naming the column and the 1-based data row
+    (blank lines count toward row numbers but yield no tick).
     """
     reader = csv.reader(io.StringIO(csv_text))
     try:
@@ -145,7 +145,7 @@ def parse_signal_csv(csv_text: str) -> dict[str, list[float | None]]:
         raise ValueError(
             f"signals CSV header repeats column(s): {', '.join(sorted(dupes))}"
         )
-    columns: dict[str, list[float | None]] = {name: [] for name in header}
+    yield header
     for rownum, row in enumerate(reader, start=1):
         if not row or (len(row) == 1 and not row[0].strip()):
             continue  # ignore trailing/blank lines entirely
@@ -154,19 +154,95 @@ def parse_signal_csv(csv_text: str) -> dict[str, list[float | None]]:
                 f"signals CSV row {rownum} has {len(row)} cells, expected "
                 f"{len(header)} (columns: {', '.join(header)})"
             )
+        parsed: list[float | None] = []
         for name, cell in zip(header, row):
             cell = cell.strip()
             if not cell:
-                columns[name].append(None)  # blank: hold previous value
+                parsed.append(None)  # blank: hold previous value
                 continue
             try:
-                columns[name].append(float(cell))
+                parsed.append(float(cell))
             except ValueError:
                 raise ValueError(
                     f"signals CSV column {name!r}, row {rownum}: "
                     f"cannot parse {cell!r} as a number"
                 ) from None
+        yield parsed
+
+
+def parse_signal_csv(csv_text: str) -> dict[str, list[float | None]]:
+    """Parse a signals CSV into tick-aligned columns (the materializing
+    wrapper over `iter_signal_csv`; identical validation and errors)."""
+    rows = iter_signal_csv(csv_text)
+    header = next(rows)
+    columns: dict[str, list[float | None]] = {name: [] for name in header}
+    for parsed in rows:
+        for name, v in zip(header, parsed):
+            columns[name].append(v)
     return columns
+
+
+class CsvFleetStream:
+    """Constant-memory playback of one-CSV-per-vehicle signal traces.
+
+    The materializing loader builds the whole `(n_ticks, n_vehicles,
+    n_signals)` trace before the plane sees a single row — O(T·N·S)
+    float32, the ingestion bottleneck of a 100k-vehicle campaign. This
+    streams instead: pass 1 replays every CSV once through
+    `iter_signal_csv` to validate all cells (the same errors the
+    materializing path raises, still eager at construction) and collect
+    the signal-name union; pass 2 replays rows one tick at a time into a
+    single `(n_vehicles, n_signals)` latest-value matrix with per-cell
+    forward fill. The working set is that one matrix — independent of
+    trace length.
+
+    `series` satisfies the plane's ``series_fn`` contract and is
+    forward-only (monotonic ticks; asking for the current tick again
+    returns the cached row). Exhausted vehicles hold their last row and
+    signals a vehicle never reports stay NaN, so the resulting plane is
+    bit-for-bit identical to `from_trace` over the materialized trace —
+    `tests/test_signal_plane.py` pins the parity.
+    """
+
+    def __init__(self, csv_texts: Sequence[str]):
+        self._texts = list(csv_texts)
+        names: set[str] = set()
+        for text in self._texts:  # pass 1: validate everything, eagerly
+            rows = iter_signal_csv(text)
+            names.update(next(rows))
+            for _ in rows:
+                pass
+        self.names: tuple[str, ...] = tuple(sorted(names))
+        col = {n: j for j, n in enumerate(self.names)}
+        self._iters: list[Iterator[list]] = []
+        self._cols: list[list[int]] = []  # header position -> plane column
+        for text in self._texts:  # pass 2: playback iterators
+            rows = iter_signal_csv(text)
+            self._cols.append([col[n] for n in next(rows)])
+            self._iters.append(rows)
+        self._current = np.full(
+            (len(self._texts), len(self.names)), np.nan, np.float32
+        )
+        self._t = -1
+
+    def series(self, t: int) -> np.ndarray:
+        if t == self._t:
+            return self._current
+        if t != self._t + 1:
+            raise ValueError(
+                f"CSV stream is forward-only: asked for tick {t} "
+                f"at tick {self._t}"
+            )
+        self._t = t
+        cur = self._current
+        for i, rows in enumerate(self._iters):
+            parsed = next(rows, None)
+            if parsed is None:
+                continue  # exhausted: hold the last row (latest-value)
+            for j, v in zip(self._cols[i], parsed):
+                if v is not None:
+                    cur[i, j] = v
+        return cur
 
 
 # --------------------------------------------------------------------- #
@@ -278,11 +354,20 @@ class FleetSignalPlane:
         csv_texts: Sequence[str],
         *,
         history: int = 256,
+        streamed: bool = True,
     ) -> "FleetSignalPlane":
         """Load one CSV per vehicle into a single plane (the
         `CsvSignalBroker` adapter path). Columns are tick-aligned; blank
         cells hold the previous value (leading blanks read as ``None``),
-        short columns hold their last value."""
+        short columns hold their last value.
+
+        ``streamed`` (the default) replays rows through `CsvFleetStream`
+        — one latest-value matrix of working memory regardless of trace
+        length. ``streamed=False`` keeps the whole-trace materialization
+        as the parity oracle; both produce bit-identical planes."""
+        if streamed:
+            stream = CsvFleetStream(csv_texts)
+            return cls(stream.names, stream.series, history=history)
         per_vehicle = [parse_signal_csv(text) for text in csv_texts]
         names = sorted({n for cols in per_vehicle for n in cols})
         n_ticks = max(

@@ -21,9 +21,10 @@ real MongoDB is an I/O swap, not a redesign.
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass, replace
 from typing import Any, Callable, Iterable
 
+from repro.core.columns import FleetColumns
 from repro.core.documents import (
     Assignment,
     InvalidTransition,
@@ -47,12 +48,69 @@ class StaleWrite(Exception):
     """Optimistic-concurrency failure inside a transaction."""
 
 
-@dataclass
 class ClientRecord:
-    client_id: str
-    logical_clock: int = 0
-    online: bool = True
-    metadata: dict[str, Any] = field(default_factory=dict)
+    """Per-client registry row. Slim slotted layout: when the store is
+    attached to a `FleetColumns` arena the logical clock and online flag
+    live in the shared numpy columns (one int64/bool per client fleet-wide
+    instead of a dict slot per object); detached records (unit tests, bare
+    stores) fall back to local scalars. Either way the attribute API is
+    unchanged — `rec.logical_clock += 1` works identically."""
+
+    __slots__ = ("client_id", "metadata", "_cols", "_row", "_clock", "_online")
+
+    def __init__(
+        self,
+        client_id: str,
+        logical_clock: int = 0,
+        online: bool = True,
+        metadata: dict[str, Any] | None = None,
+    ):
+        self.client_id = client_id
+        self.metadata = {} if metadata is None else metadata
+        self._cols: FleetColumns | None = None
+        self._row = -1
+        self._clock = int(logical_clock)
+        self._online = bool(online)
+
+    def bind(self, cols: FleetColumns) -> None:
+        """Move this record's scalars into the shared arena."""
+        row = cols.row_for(self.client_id)
+        cols.clock[row] = self._clock
+        cols.online[row] = self._online
+        self._cols, self._row = cols, row
+
+    @property
+    def logical_clock(self) -> int:
+        if self._cols is not None:
+            return int(self._cols.clock[self._row])
+        return self._clock
+
+    @logical_clock.setter
+    def logical_clock(self, value: int) -> None:
+        if self._cols is not None:
+            self._cols.clock[self._row] = value
+        else:
+            self._clock = int(value)
+
+    @property
+    def online(self) -> bool:
+        if self._cols is not None:
+            return bool(self._cols.online[self._row])
+        return self._online
+
+    @online.setter
+    def online(self, value: bool) -> None:
+        if self._cols is not None:
+            self._cols.online[self._row] = value
+        else:
+            self._online = bool(value)
+
+    def __repr__(self) -> str:  # debugging parity with the old dataclass
+        return (
+            f"ClientRecord(client_id={self.client_id!r}, "
+            f"logical_clock={self.logical_clock}, online={self.online}, "
+            f"metadata={self.metadata!r})"
+        )
 
 
 class StateStore:
@@ -66,6 +124,8 @@ class StateStore:
 
     def __init__(self) -> None:
         self._lock = threading.RLock()
+        #: optional shared columnar arena for per-client scalars
+        self._columns: FleetColumns | None = None
         self._payloads: dict[str, Payload] = {}
         self._parameters: dict[str, Parameters] = {}
         self._tasks: dict[str, Task] = {}
@@ -93,6 +153,19 @@ class StateStore:
     # ------------------------------------------------------------------ #
     # clients + logical clocks                                           #
     # ------------------------------------------------------------------ #
+    def attach_columns(self, cols: FleetColumns) -> None:
+        """Bind this store to a shared `FleetColumns` arena: existing and
+        future `ClientRecord`s keep their clocks/online flags in the
+        arena's numpy columns (fleet-wide gauges become one reduction)."""
+        with self._lock:
+            self._columns = cols
+            for rec in self._clients.values():
+                rec.bind(cols)
+
+    @property
+    def columns(self) -> FleetColumns | None:
+        return self._columns
+
     def register_client(
         self, client_id: str, metadata: dict[str, Any] | None = None
     ) -> ClientRecord:
@@ -100,6 +173,8 @@ class StateStore:
             rec = self._clients.get(client_id)
             if rec is None:
                 rec = ClientRecord(client_id=client_id, metadata=metadata or {})
+                if self._columns is not None:
+                    rec.bind(self._columns)
                 self._clients[client_id] = rec
             elif metadata:
                 rec.metadata.update(metadata)
@@ -270,16 +345,11 @@ class StateStore:
                 accepted += 1
             new_task = task
             if accepted:
-                new_task = Task(
-                    **{
-                        **new_task.__dict__,
-                        "results_count": len(stored),
-                    }
-                )
+                new_task = replace(new_task, results_count=len(stored))
             if status is not None and status != TaskStatus.ACTIVE:
                 new_task = new_task.with_status(status)
                 if status == TaskStatus.ERROR and error_log:
-                    new_task = Task(**{**new_task.__dict__, "error_log": error_log})
+                    new_task = replace(new_task, error_log=error_log)
             if new_task is not task:
                 store._tasks[task_id] = new_task
                 store._bump_clock(task.client_id)
@@ -336,7 +406,7 @@ class StateStore:
             )
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, slots=True)
 class TaskSyncInfo:
     task_id: str
     payload_id: str
@@ -344,7 +414,7 @@ class TaskSyncInfo:
     results_count: int
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, slots=True)
 class ClientStateSnapshot:
     client_id: str
     ts: int

@@ -53,7 +53,7 @@ from repro.fleet.analytics import (
     WindowInFlight,
     WindowStats,
 )
-from repro.fleet.engine import Entry, EngineService
+from repro.fleet.engine import CalendarService, Entry, EngineService
 from repro.fleet.federated import FedConfig
 from repro.fleet.metrics import RoundMetrics, RoundProgress
 from repro.fleet.rounds import DeadlinePump, FederatedDriver, RoundInFlight
@@ -95,6 +95,17 @@ _TAGGED = (
 )
 _TAG_BY_TYPE = {t: t.__name__.lstrip("_") for t in _TAGGED}
 _TYPE_BY_TAG = {tag: t for t, tag in _TAG_BY_TYPE.items()}
+#: encoded field order per tagged type. Dataclasses use their field
+#: order; `ClientRecord` is a slotted arena-view class (not a
+#: dataclass), so its order is pinned to the constructor signature.
+_FIELD_NAMES = {
+    t: (
+        ("client_id", "logical_clock", "online", "metadata")
+        if t is ClientRecord
+        else tuple(f.name for f in dataclasses.fields(t))
+    )
+    for t in _TAGGED
+}
 
 
 class _Codec:
@@ -113,8 +124,8 @@ class _Codec:
             return ["TaskStatus", obj.value]
         tag = _TAG_BY_TYPE.get(t)
         if tag is not None:
-            return [tag, [self.enc(getattr(obj, f.name))
-                          for f in dataclasses.fields(t)]]
+            return [tag, [self.enc(getattr(obj, name))
+                          for name in _FIELD_NAMES[t]]]
         if t is list:
             return ["list", [self.enc(v) for v in obj]]
         if t is tuple:
@@ -313,6 +324,11 @@ def _restore_store(store, s: dict, codec: _Codec) -> None:
     for name in _STORE_DICTS:
         setattr(store, name, codec.dec(s[name]))
     # _watchers untouched: the fresh server watcher wiring stands
+    if store.columns is not None:
+        # decoded ClientRecords are unbound (local scalars); rebind them
+        # to the arena — the columns section overwrites the arena last,
+        # so these writes only re-establish the view wiring
+        store.attach_columns(store.columns)
 
 
 # --------------------------------------------------------------------------- #
@@ -525,6 +541,21 @@ def _restore_churn(sim, s: dict, mpath: Path) -> None:
 # --------------------------------------------------------------------------- #
 
 def _snap_service(svc, codec: _Codec) -> dict:
+    if isinstance(svc, CalendarService):  # deepest subclass first
+        # the refill schedule lives in lane membership bits, not the
+        # heap: save them directly (resync membership also equals the
+        # power state, but saving it keeps restore order-independent)
+        n = svc._capacity
+        return {
+            "kind": "calendar",
+            "runnable": [bool(b) for b in svc._runnable],
+            "hot": [int(i) for i in svc._hot],
+            "due": [int(i) for i in svc._due],
+            "resync": [int(i) for i in
+                       np.nonzero(svc._resync_lane._on[:n])[0]],
+            "release": [int(i) for i in
+                        np.nonzero(svc._release_lane._on[:n])[0]],
+        }
     if isinstance(svc, EngineService):  # subclass check first
         return {
             "kind": "engine",
@@ -563,8 +594,23 @@ def _restore_service(sim, s: dict, mpath: Path) -> None:
             f"{runnable.shape}, live scheduler expects {svc._runnable.shape}"
         )
     svc._runnable[:] = runnable
-    if kind == "engine":
-        if not isinstance(svc, EngineService):
+    if kind == "calendar":
+        if not isinstance(svc, CalendarService):
+            raise CheckpointError(
+                f"checkpoint {mpath}: service kind mismatch: saved "
+                f"'calendar', live {type(svc).__name__}"
+            )
+        svc._hot = deque(int(i) for i in s["hot"])
+        svc._due = [int(i) for i in s["due"]]
+        for lane, key in ((svc._resync_lane, "resync"),
+                          (svc._release_lane, "release")):
+            lane._on[:] = False
+            for i in s[key]:
+                lane.set_member(int(i), True)
+    elif kind == "engine":
+        if not isinstance(svc, EngineService) or isinstance(
+            svc, CalendarService
+        ):
             raise CheckpointError(
                 f"checkpoint {mpath}: service kind mismatch: saved 'engine', "
                 f"live {type(svc).__name__}"
@@ -573,6 +619,39 @@ def _restore_service(sim, s: dict, mpath: Path) -> None:
         svc._due = [int(i) for i in s["due"]]
         svc._resync_at = {int(k): int(v) for k, v in s["resync_at"]}
         svc._release_at = {int(k): int(v) for k, v in s["release_at"]}
+
+
+# --------------------------------------------------------------------------- #
+# columnar per-client arena
+# --------------------------------------------------------------------------- #
+
+def _snap_columns(sim, codec: _Codec) -> dict | None:
+    cols = getattr(sim, "columns", None)
+    if cols is None:
+        return None
+    return {
+        "ids": list(cols.client_ids()),
+        "arrays": {name: codec.enc(arr)
+                   for name, arr in cols.snapshot().items()},
+    }
+
+
+def _restore_columns(sim, s: dict | None, codec: _Codec, mpath: Path) -> None:
+    """Overwrite the arena from its snapshot — applied LAST, so the
+    column values (clocks, power, timestamps, gating bits) written
+    through viewer properties during the earlier restore passes are
+    superseded by the authoritative saved arrays."""
+    cols = getattr(sim, "columns", None)
+    if s is None or cols is None:
+        return
+    ids = list(s["ids"])
+    live = list(cols.client_ids())
+    if ids != live:
+        raise CheckpointError(
+            f"checkpoint {mpath}: columns row registry does not match the "
+            f"fresh fleet (saved {len(ids)} rows, live {len(live)})"
+        )
+    cols.load({name: codec.dec(v) for name, v in s["arrays"].items()}, ids)
 
 
 # --------------------------------------------------------------------------- #
@@ -875,7 +954,13 @@ class FleetCheckpoint:
     """
 
     @staticmethod
-    def save(sim, path: str | Path, *, driver=None, rif=None) -> Path:
+    def save(sim, path: str | Path, *, driver=None, rif=None,
+             previous: str | Path | None = None) -> Path:
+        """Freeze the fleet at ``path``. With ``previous`` (the last
+        checkpoint of the same run), unchanged content-addressed arrays
+        are hardlinked from it instead of rewritten — periodic saves of
+        a mostly-idle mega-fleet cost I/O proportional to what changed
+        (the launch hook threads this automatically)."""
         if rif is not None and driver is None:
             raise CheckpointError(
                 "cannot checkpoint an in-flight round without its driver"
@@ -907,6 +992,7 @@ class FleetCheckpoint:
             "vehicles": _snap_vehicles(sim.pool, codec),
             "plane": _snap_plane(sim.plane, codec),
             "service": _snap_service(sim.service, codec),
+            "columns": _snap_columns(sim, codec),
             "metrics": {
                 "rounds": codec.enc(sim.metrics.rounds),
                 "progress": codec.enc(sim.metrics.progress),
@@ -918,7 +1004,10 @@ class FleetCheckpoint:
         }
         path = Path(path)
         path.mkdir(parents=True, exist_ok=True)
-        BlobStore(path / "arrays").put("arrays", codec.arrays)
+        BlobStore(path / "arrays").put(
+            "arrays", codec.arrays,
+            link_from=None if previous is None else Path(previous) / "arrays",
+        )
         manifest = {"format": FORMAT, "schema": SCHEMA_VERSION,
                     "state": state}
         (path / "manifest.json").write_text(
@@ -984,6 +1073,7 @@ class FleetCheckpoint:
         _restore_plane(sim, state["plane"], codec, mpath)
         sim.metrics.rounds = codec.dec(state["metrics"]["rounds"])
         sim.metrics.progress = codec.dec(state["metrics"]["progress"])
+        _restore_columns(sim, state.get("columns"), codec, mpath)
         sim.t = state["t"]
 
         driver = None

@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core.broker import Broker
 from repro.core.client import EdgeClient, LocalDisk
+from repro.core.columns import FleetColumns
 from repro.core.signals import (
     FleetSignalPlane,
     ScriptedSignalBroker,
@@ -33,7 +34,7 @@ from repro.core.signals import (
 from repro.core.statestore import StateStore
 
 
-@dataclass
+@dataclass(slots=True)
 class Vehicle:
     client_id: str
     disk: LocalDisk
@@ -52,6 +53,7 @@ class FleetPool:
         n_vehicles: int,
         signal_fn: Callable[[int], dict] | None = None,
         plane: FleetSignalPlane | None = None,
+        columns: FleetColumns | None = None,
         seed: int = 0,
     ):
         if signal_fn is not None and plane is not None:
@@ -62,6 +64,12 @@ class FleetPool:
         self.rng = np.random.default_rng(seed)
         self._signal_fn = signal_fn
         self.plane = plane
+        #: shared columnar arena for per-client scalars (clients bind on
+        #: power-on; None keeps the legacy per-object scalars)
+        self.columns = columns
+        # one shared sensors list for plane-backed fleets: every vehicle
+        # sees the same signal catalog, so 100k copies is pure overhead
+        self._plane_sensors: list[str] | None = None
         #: attached fleet service (repro.fleet.service) notified on power
         #: transitions so wake hooks follow the live EdgeClient instance
         self._service = None
@@ -95,7 +103,9 @@ class FleetPool:
             while i >= self.plane.n_clients:
                 self.plane.add_client()
             signals: SignalBroker = self.plane.view(i)
-            sensors = list(self.plane.names)
+            if self._plane_sensors is None:
+                self._plane_sensors = list(self.plane.names)
+            sensors = self._plane_sensors
         else:
             signals = ScriptedSignalBroker(
                 self._signal_fn(i)
@@ -129,6 +139,8 @@ class FleetPool:
             cid, self.server, self.broker, disk=v.disk,
             signal_broker=v.signals, metadata=v.metadata,
         )
+        if self.columns is not None:
+            v.client.bind_columns(self.columns)
         v.client.bootstrap()
         self.store.set_online(cid, True)
         i = v.metadata["index"]

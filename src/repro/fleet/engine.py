@@ -36,6 +36,8 @@ from collections import deque
 from functools import partial
 from typing import TYPE_CHECKING, Callable, Iterable
 
+import numpy as np
+
 from repro.fleet.service import FleetServiceScheduler
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -66,6 +68,88 @@ class Entry:
         self.canceled = True
 
 
+class CalendarLane:
+    """A numpy calendar-queue lane for phase-periodic per-index events.
+
+    The engine heap is pure Python: at 100k+ vehicles the heappush/pop
+    constant on high-rate same-tick service refills dominates a
+    mostly-idle tick (the PR 6 follow-up). But the refill schedule is
+    *purely periodic* — index ``i`` fires exactly when
+    ``(t + i) % period == 0``, a time-invariant phase — so the whole
+    schedule collapses to calendar buckets: bucket ``i % period`` holds
+    index ``i`` forever, and the bucket due at tick ``t`` is
+    ``(-t) % period``. Firing a tick is then ONE vectorized gather
+    (`bucket[self._on[bucket]]`) over a boolean membership column instead
+    of O(due) heap pops + O(due) re-pushes.
+
+    * periodic mode (resync refills): membership = powered-on; the lane
+      fires the index at every due tick while the bit is set — the exact
+      fire set of a heap entry that re-arms itself one period ahead, with
+      power-off handled by clearing the bit instead of a stale check.
+    * ``one_shot`` mode (straggler releases): arming sets the bit; the
+      first due tick clears it and fires — the next ungated slot, exactly
+      the heap's ``t + (-(t + i)) % period`` booking.
+
+    The callback receives the WHOLE due batch as one index array — the
+    "batch same-tick refills into one array op" design.
+    """
+
+    __slots__ = ("period", "callback", "one_shot", "_on", "_buckets")
+
+    def __init__(
+        self,
+        period: int,
+        callback: Callable[[np.ndarray, int], None],
+        *,
+        one_shot: bool = False,
+        capacity: int = 1,
+    ):
+        self.period = max(1, int(period))
+        self.callback = callback
+        self.one_shot = one_shot
+        self._on = np.zeros(max(1, int(capacity)), bool)
+        #: phase -> cached ascending index array (rebuilt on growth)
+        self._buckets: dict[int, np.ndarray] = {}
+
+    def ensure(self, n: int) -> None:
+        if n <= len(self._on):
+            return
+        cap = max(int(n), 2 * len(self._on))
+        arr = np.zeros(cap, bool)
+        arr[: len(self._on)] = self._on
+        self._on = arr
+        self._buckets.clear()
+
+    def set_member(self, i: int, member: bool) -> None:
+        self.ensure(i + 1)
+        self._on[i] = member
+
+    def member(self, i: int) -> bool:
+        return i < len(self._on) and bool(self._on[i])
+
+    def _bucket(self, phase: int) -> np.ndarray:
+        # cache invalidated wholesale by ensure() on growth
+        b = self._buckets.get(phase)
+        if b is None:
+            b = np.arange(phase, len(self._on), self.period)
+            self._buckets[phase] = b
+        return b
+
+    def due(self, t: int) -> np.ndarray:
+        """Member indices due at tick t, ascending — one boolean gather."""
+        bucket = self._bucket((-t) % self.period)
+        return bucket[self._on[bucket]]
+
+    def fire(self, t: int) -> int:
+        due = self.due(t)
+        if due.size == 0:
+            return 0
+        if self.one_shot:
+            self._on[due] = False
+        self.callback(due, t)
+        return int(due.size)
+
+
 class EventEngine:
     """A single time-ordered event heap for the whole fleet world.
 
@@ -90,6 +174,10 @@ class EventEngine:
         self._heap: list[tuple[int, int, int, int, Entry]] = []
         self._seq = Counter()
         self._wakes: dict[str, Callable[[], None]] = {}
+        #: calendar-queue lanes fired at the PHASE_SERVICE point of every
+        #: drain (registration order). The heap stays the home of sparse
+        #: timers and churn; lanes carry the high-rate periodic refills.
+        self._lanes: list[CalendarLane] = []
         #: last drained tick; during a drain, the tick being drained
         self.now = 0
         #: True while `drain` runs — same-tick schedules are legal then
@@ -141,18 +229,44 @@ class EventEngine:
         sub.wake = pump
         return sub
 
+    def add_lane(self, lane: CalendarLane) -> None:
+        """Register a calendar-queue lane. Lanes fire between the heap's
+        PHASE_CHURN and later-phase entries of each drained tick, so lane
+        events occupy the same slot in the deterministic order that
+        PHASE_SERVICE heap entries do (membership changes made by churn
+        callbacks at tick t are visible to tick t's lane fires, exactly
+        like the heap's same-drain service bookings)."""
+        self._lanes.append(lane)
+
     # -- the per-tick sweep --------------------------------------------- #
     def drain(self, t: int) -> int:
         """Run every entry due at or before tick `t`, in deterministic
         (at, phase, key, schedule-order) order. Callbacks may schedule
         same-tick entries (e.g. a churn power-on queueing a service
         refill at `t`); the heap ordering runs them in phase order within
-        this same drain. Returns the number of entries fired."""
+        this same drain. Calendar lanes fire at the churn/service
+        boundary — with no lanes registered the split pop loop below is
+        the original single loop, entry for entry. Returns the number of
+        events fired (heap entries + lane batch members)."""
         self.now = t
         self.draining = True
         fired = 0
         heap = self._heap
         try:
+            # overdue entries and this tick's churn toggles first: lane
+            # membership must reflect every power transition at tick t
+            while heap and (
+                heap[0][0] < t or (heap[0][0] == t and heap[0][1] == PHASE_CHURN)
+            ):
+                entry = heapq.heappop(heap)[4]
+                if entry.canceled:
+                    continue
+                entry.fired = True
+                if entry.fn is not None:
+                    entry.fn()
+                fired += 1
+            for lane in self._lanes:
+                fired += lane.fire(t)
             while heap and heap[0][0] <= t:
                 entry = heapq.heappop(heap)[4]
                 if entry.canceled:
@@ -327,3 +441,88 @@ class EngineService(FleetServiceScheduler):
                 live.append(i)
         heapq.heapify(live)
         self._sweep(live, t)
+
+
+class CalendarService(EngineService):
+    """`EngineService` with the periodic refill schedule moved out of the
+    Python heap into numpy `CalendarLane`s — the 100k+ fast path.
+
+    The heap version books one entry per online client per resync period
+    and re-pushes it on every fire: O(online) heappush/pop per period,
+    pure Python, the dominant cost of a mostly-idle mega-fleet tick. But
+    the resync schedule is time-invariant — client ``i`` refills exactly
+    when ``(t + i) % resync_period == 0`` — so membership in calendar
+    bucket ``i % period`` plus a powered-on bit reproduces the heap's
+    fire set with ONE vectorized gather per tick:
+
+    * **resync lane** (periodic): the membership bit IS the power state;
+      `_schedule_resync`/power-off set/clear it. No re-arming, no stale
+      checks — a cleared bit is the stale check.
+    * **release lane** (one-shot): `_on_gated_skip` arms the bit; the
+      lane fires it at the next ungated slot — the heap's
+      ``t + (-(t + i)) % straggler_period`` booking — and clears it.
+
+    Everything else — the hot wake queue, `_due` consumption, `_sweep`
+    order and discipline — is inherited unchanged, so the bit-for-bit
+    parity argument reduces to lane-fires == heap-fires, which
+    `tests/test_calendar.py` proves over random schedules and a dense
+    grid. The heap `EngineService` stays the parity oracle per house
+    style.
+    """
+
+    def __init__(
+        self,
+        engine: EventEngine,
+        pool: "FleetPool",
+        *,
+        steps_per_tick: int,
+        resync_period: int,
+        straggler_period: int,
+        straggler_indices: Iterable[int] = (),
+    ):
+        cap = max(1, len(pool.vehicles))
+        self._resync_lane = CalendarLane(
+            resync_period, self._lane_resync, capacity=cap
+        )
+        self._release_lane = CalendarLane(
+            straggler_period, self._lane_release, one_shot=True, capacity=cap
+        )
+        engine.add_lane(self._resync_lane)
+        engine.add_lane(self._release_lane)
+        # super() powers on every live vehicle, which routes through the
+        # lane-backed _schedule_resync below — lanes must already exist
+        super().__init__(
+            engine,
+            pool,
+            steps_per_tick=steps_per_tick,
+            resync_period=resync_period,
+            straggler_period=straggler_period,
+            straggler_indices=straggler_indices,
+        )
+
+    # -- lane callbacks (whole due batch per tick) ----------------------- #
+    def _lane_resync(self, idx: "np.ndarray", t: int) -> None:
+        # the heap's _fire_resync appended unconditionally (staleness was
+        # the power check); membership already encodes power state here
+        self._due.extend(idx.tolist())
+
+    def _lane_release(self, idx: "np.ndarray", t: int) -> None:
+        runnable = self._runnable
+        clients = self._clients
+        for i in idx.tolist():
+            if runnable[i] and clients[i] is not None:
+                self._due.append(i)
+
+    # -- lane-backed refill schedule -------------------------------------- #
+    def _schedule_resync(self, i: int) -> None:
+        self._resync_lane.set_member(i, True)
+
+    def _on_gated_skip(self, i: int, t: int) -> None:
+        if not self._runnable[i] or self._release_lane.member(i):
+            return
+        self._release_lane.set_member(i, True)
+
+    def client_powered_off(self, index: int) -> None:
+        super().client_powered_off(index)
+        self._resync_lane.set_member(index, False)
+        self._release_lane.set_member(index, False)

@@ -14,11 +14,15 @@ simulation, so determinism (same seed -> same aggregate) is unaffected.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
 
 import numpy as np
 
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.columns import FleetColumns
 
-@dataclass(frozen=True)
+
+@dataclass(frozen=True, slots=True)
 class RoundMetrics:
     round: int
     online_at_start: int
@@ -37,7 +41,7 @@ class RoundMetrics:
         return self.participants / max(1, self.online_at_start)
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, slots=True)
 class RoundProgress:
     """Live gauge of the round currently in flight, fed from the same
     O(1) `AssignmentDoc.counts()` status-event counters the deadline
@@ -72,9 +76,34 @@ class FleetMetrics:
     #: every counts snapshot, so dashboards can poll completed / failed /
     #: canceled live instead of waiting for the round record
     progress: RoundProgress | None = None
+    #: shared per-client arena (repro.core.columns): when attached,
+    #: `fleet_gauges` reads fleet-wide state as vectorized reductions
+    #: over the same columns the store and services write — a view, not
+    #: a copy
+    columns: "FleetColumns | None" = None
 
     def record(self, rec: RoundMetrics) -> None:
         self.rounds.append(rec)
+
+    # -- columnar fleet gauges ------------------------------------------ #
+    def fleet_gauges(self) -> dict[str, float]:
+        """Instantaneous fleet-wide gauges, each ONE numpy reduction over
+        the shared columns: no per-client Python loop, no copies. Empty
+        dict when no arena is attached."""
+        cols = self.columns
+        if cols is None or cols.n_rows == 0:
+            return {}
+        n = cols.n_rows
+        return {
+            "clients": n,
+            "online": int(np.count_nonzero(cols.online[:n])),
+            "registered": int(np.count_nonzero(cols.registered[:n])),
+            "runnable": int(np.count_nonzero(cols.runnable[:n])),
+            "stragglers": int(np.count_nonzero(cols.straggler[:n])),
+            "unacked_results": int(cols.unacked[:n].sum()),
+            "mean_clock": float(cols.clock[:n].mean()),
+            "max_clock": int(cols.clock[:n].max()),
+        }
 
     # -- live per-round progress (PR 6 follow-up (c)) ------------------- #
     def begin_round(self, round_id: int, total: int) -> None:

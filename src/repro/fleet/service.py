@@ -132,8 +132,20 @@ class FleetServiceScheduler:
         if self._uses_masks:
             self._idx = np.arange(n)
             self._online = np.zeros(n, bool)
-        self._runnable = np.zeros(n, bool)
-        self._straggler = np.zeros(n, bool)
+        # gating state lives in the pool's shared FleetColumns arena when
+        # one is attached (the columnar control plane: StateStore, the
+        # services, and FleetMetrics all view the same per-client arrays);
+        # detached pools fall back to private arrays. Access goes through
+        # the `_runnable`/`_straggler` properties — the arena reallocates
+        # on growth, so views are taken at use time, never cached.
+        self._cols = getattr(pool, "columns", None)
+        if self._cols is not None:
+            self._cols.ensure(n)
+            self._cols.runnable[:n] = False
+            self._cols.straggler[:n] = False
+        else:
+            self._runnable_local = np.zeros(n, bool)
+            self._straggler_local = np.zeros(n, bool)
         self._clients: list["EdgeClient | None"] = [None] * n
         for i in straggler_indices:
             self._ensure_index(i)
@@ -149,6 +161,35 @@ class FleetServiceScheduler:
         for v in pool.vehicles.values():
             if v.client is not None:
                 self.client_powered_on(v.metadata["index"], v.client)
+
+    # ------------------------------------------------------------------ #
+    # gating columns (arena-backed when the pool carries a FleetColumns) #
+    # ------------------------------------------------------------------ #
+    @property
+    def _runnable(self) -> np.ndarray:
+        if self._cols is not None:
+            return self._cols.runnable[: self._capacity]
+        return self._runnable_local
+
+    @_runnable.setter
+    def _runnable(self, arr) -> None:
+        if self._cols is not None:
+            self._cols.runnable[: self._capacity] = arr
+        else:
+            self._runnable_local = np.asarray(arr, bool)
+
+    @property
+    def _straggler(self) -> np.ndarray:
+        if self._cols is not None:
+            return self._cols.straggler[: self._capacity]
+        return self._straggler_local
+
+    @_straggler.setter
+    def _straggler(self, arr) -> None:
+        if self._cols is not None:
+            self._cols.straggler[: self._capacity] = arr
+        else:
+            self._straggler_local = np.asarray(arr, bool)
 
     # ------------------------------------------------------------------ #
     # wake plumbing                                                      #
@@ -183,14 +224,18 @@ class FleetServiceScheduler:
         if i < self._capacity:
             return
         cap = max(i + 1, 2 * self._capacity)
-        names = ("_runnable", "_straggler")
         if self._uses_masks:
-            names += ("_online",)
             self._idx = np.arange(cap)
-        for name in names:
             arr = np.zeros(cap, bool)
-            arr[: self._capacity] = getattr(self, name)
-            setattr(self, name, arr)
+            arr[: self._capacity] = self._online
+            self._online = arr
+        if self._cols is not None:
+            self._cols.ensure(cap)  # new rows default runnable/straggler=False
+        else:
+            for name in ("_runnable_local", "_straggler_local"):
+                arr = np.zeros(cap, bool)
+                arr[: self._capacity] = getattr(self, name)
+                setattr(self, name, arr)
         self._clients.extend([None] * (cap - self._capacity))
         self._capacity = cap
 

@@ -56,12 +56,13 @@ from typing import Callable
 import numpy as np
 
 from repro.core.broker import Broker, seeded_fault_plan
+from repro.core.columns import FleetColumns, deep_sizeof
 from repro.core.server import make_platform
 from repro.core.user import User
 from repro.fleet.analytics import AnalyticsConfig, AnalyticsDriver
 from repro.fleet.churn import make_churn
 from repro.fleet.elastic import FleetPool
-from repro.fleet.engine import EngineService, EventEngine
+from repro.fleet.engine import CalendarService, EngineService, EventEngine
 from repro.fleet.federated import FedConfig
 from repro.fleet.metrics import FleetMetrics, RoundMetrics
 from repro.fleet.rounds import FederatedDriver
@@ -82,10 +83,13 @@ class PlaneBackend(str, enum.Enum):
 
 class ServiceBackend(str, enum.Enum):
     """Fleet sync-loop service: the event-driven scheduler (O(runnable)
-    per tick; engine-native when the engine backend is "event") or the
-    original dense O(N) poll loop, kept as the parity oracle."""
+    per tick; engine-native when the engine backend is "event"), the
+    calendar-queue service (periodic refills in numpy lanes — the 100k+
+    fast path; requires the event engine), or the original dense O(N)
+    poll loop, kept as the parity oracle."""
 
     SCHEDULER = "scheduler"
+    CALENDAR = "calendar"
     DENSE = "dense"
 
 
@@ -231,6 +235,13 @@ class FleetSimulator:
         )
         self.broker = Broker(faults)
         self.store, _, (self.server,) = make_platform(broker=self.broker)
+        # the columnar control plane: ONE structure-of-arrays arena holds
+        # every per-client scalar (logical clocks, power/registered flags,
+        # sync timestamps, unacked counts, service gating). Attached to
+        # the store BEFORE the pool registers vehicles, so arena rows are
+        # allocated in vehicle-index order.
+        self.columns = FleetColumns(cfg.n_clients)
+        self.store.attach_columns(self.columns)
         #: the unified event heap (None under the legacy dense tick path)
         self.engine = (
             EventEngine(self.broker)
@@ -258,10 +269,11 @@ class FleetSimulator:
             n_vehicles=cfg.n_clients,
             signal_fn=signal_fn,
             plane=self.plane,
+            columns=self.columns,
             seed=cfg.seed,
         )
         self.user = User(self.server, self.broker)
-        self.metrics = FleetMetrics()
+        self.metrics = FleetMetrics(columns=self.columns)
         self.t = 0
         # churn: seeded geometric *event times* per vehicle (O(events) per
         # tick) instead of a per-vehicle per-tick coin; each vehicle draws
@@ -294,8 +306,20 @@ class FleetSimulator:
         # when the engine backend is "event") or the dense poll-loop
         # oracle — attached after the quiesce so the scheduler's runnable
         # set starts from the fleet's true (idle) state
-        if self.engine is not None and b.service is ServiceBackend.SCHEDULER:
-            self.service = EngineService(
+        if b.service is ServiceBackend.CALENDAR and self.engine is None:
+            raise ValueError(
+                "service backend 'calendar' needs the event engine "
+                "(Backends(engine='event')) — its lanes fire from the drain"
+            )
+        if self.engine is not None and b.service in (
+            ServiceBackend.SCHEDULER, ServiceBackend.CALENDAR
+        ):
+            service_cls = (
+                CalendarService
+                if b.service is ServiceBackend.CALENDAR
+                else EngineService
+            )
+            self.service = service_cls(
                 self.engine,
                 self.pool,
                 steps_per_tick=cfg.steps_per_tick,
@@ -357,6 +381,54 @@ class FleetSimulator:
     # zero-arg world-advancer
     def pump(self) -> None:
         self.tick()
+
+    # ------------------------------------------------------------------ #
+    # memory accounting                                                  #
+    # ------------------------------------------------------------------ #
+    def memory_report(self) -> dict[str, int | float]:
+        """Bytes per subsystem (recursive `deep_sizeof` walk) plus the
+        headline bytes/client figure. One shared identity memo across
+        categories, walked in order, so shared structures (the arena, the
+        store the clients reference) are billed to the first category
+        that reaches them and never double-counted."""
+        seen: set[int] = set()
+        plane_b = deep_sizeof(self.plane, seen) if self.plane is not None else 0
+        cols_b = deep_sizeof(self.columns, seen)
+        docs_b = deep_sizeof(self.store, seen)
+        queues_b = deep_sizeof(self.broker, seen)
+        clients_b = deep_sizeof(self.pool, seen)
+        other_b = deep_sizeof(self.service, seen) + deep_sizeof(
+            self.churn, seen
+        )
+        if self.engine is not None:
+            other_b += deep_sizeof(self.engine, seen)
+        total = plane_b + cols_b + docs_b + queues_b + clients_b + other_b
+        n = len(self.pool.vehicles)
+        return {
+            "n_clients": n,
+            "plane": plane_b,
+            "columns": cols_b,
+            "docs": docs_b,
+            "queues": queues_b,
+            "clients": clients_b,
+            "other": other_b,
+            "total": total,
+            "bytes_per_client": total / max(1, n),
+        }
+
+    @staticmethod
+    def format_memory_report(report: dict[str, int | float]) -> str:
+        """The `launch.fleet --memory-report` table."""
+        lines = [
+            f"memory report ({report['n_clients']} clients)",
+            "  section      bytes        bytes/client",
+        ]
+        n = max(1, int(report["n_clients"]))
+        for key in ("plane", "columns", "docs", "queues", "clients", "other",
+                    "total"):
+            b = int(report[key])
+            lines.append(f"  {key:<11}{b:>12,}{b / n:>15,.1f}")
+        return "\n".join(lines)
 
     # ------------------------------------------------------------------ #
     # federated-learning campaign                                        #

@@ -59,11 +59,14 @@ def build_parser() -> argparse.ArgumentParser:
                     help="per-tick ignition-on prob")
     ap.add_argument("--stragglers", type=float, default=0.0,
                     help="fraction of slow clients")
-    ap.add_argument("--service", choices=("scheduler", "dense"),
+    ap.add_argument("--service", choices=("scheduler", "calendar", "dense"),
                     default="scheduler",
                     help="fleet service: event-driven scheduler "
-                         "(O(runnable)/tick) or the dense poll-loop "
-                         "oracle (O(N)/tick, identical interleaving)")
+                         "(O(runnable)/tick), the calendar-queue variant "
+                         "(same heap service with periodic refills moved "
+                         "into numpy lanes — the 100k+ fast path), or the "
+                         "dense poll-loop oracle (O(N)/tick, identical "
+                         "interleaving)")
     ap.add_argument("--engine", choices=("event", "dense"), default="event",
                     help="tick orchestration: one unified time-ordered "
                          "event heap (churn toggles, service refills, "
@@ -104,6 +107,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="resume from a checkpoint directory: finishes any "
                          "in-flight round, then runs --rounds more "
                          "(workload/config come from the checkpoint)")
+    ap.add_argument("--memory-report", action="store_true",
+                    help="print the per-category bytes/client breakdown "
+                         "(signal plane, columnar arena, documents, "
+                         "queues, client objects) before the workload "
+                         "runs")
     return ap
 
 
@@ -118,12 +126,15 @@ def _checkpoint_hook(ap: argparse.ArgumentParser, args, sim):
     if every < 1:
         ap.error("--checkpoint-every must be >= 1")
     root = Path(args.checkpoint_to)
+    last: list[Path | None] = [None]
 
     def hook(rnd: int, driver) -> None:
         if (rnd + 1) % every == 0:
             path = FleetCheckpoint.save(
-                sim, root / f"round-{rnd:04d}", driver=driver
+                sim, root / f"round-{rnd:04d}", driver=driver,
+                previous=last[0],  # hardlink unchanged arrays
             )
+            last[0] = path
             print(f"checkpoint saved: {path}")
 
     return hook
@@ -137,6 +148,8 @@ def _resume(ap: argparse.ArgumentParser, args) -> None:
         ap.error(f"checkpoint {args.restore_from} has no workload driver; "
                  "nothing to resume")
     hook = _checkpoint_hook(ap, args, sim)
+    if args.memory_report:
+        print(FleetSimulator.format_memory_report(sim.memory_report()))
     analytics = isinstance(driver, AnalyticsDriver)
     if rif is not None:
         # finish the round that was mid-flight when the checkpoint was
@@ -221,6 +234,8 @@ def main() -> None:
         )
     )
     hook = _checkpoint_hook(ap, args, sim)
+    if args.memory_report:
+        print(FleetSimulator.format_memory_report(sim.memory_report()))
     if args.workload == "analytics":
         driver = sim.run_analytics(
             AnalyticsConfig(

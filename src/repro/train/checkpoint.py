@@ -18,6 +18,7 @@ from __future__ import annotations
 import hashlib
 import io
 import json
+import os
 from pathlib import Path
 from typing import Any
 
@@ -85,7 +86,23 @@ class BlobStore:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
 
-    def put(self, name: str, tree: Any) -> str:
+    def put(
+        self,
+        name: str,
+        tree: Any,
+        *,
+        link_from: "BlobStore | str | Path | None" = None,
+    ) -> str:
+        """Write a blob. With ``link_from`` (a previous checkpoint's
+        store), any leaf whose content-addressed file already exists
+        there is hardlinked instead of rewritten — an incremental save
+        costs disk and I/O only for the leaves that actually changed.
+        Falls back to a plain write where hardlinks are unsupported
+        (cross-device stores); `get`'s hash check still guards reads."""
+        src_root: Path | None = None
+        if link_from is not None:
+            src_root = (link_from.root if isinstance(link_from, BlobStore)
+                        else Path(link_from))
         leaves: list[np.ndarray] = []
         skeleton = _flatten(tree, leaves)
         entries = []
@@ -95,7 +112,14 @@ class BlobStore:
             fname = f"{digest[:24]}.npy"
             path = self.root / fname
             if not path.exists():  # content-addressed: dedup identical leaves
-                path.write_bytes(raw)
+                src = None if src_root is None else src_root / fname
+                if src is not None and src.exists():
+                    try:
+                        os.link(src, path)
+                    except OSError:
+                        path.write_bytes(raw)
+                else:
+                    path.write_bytes(raw)
             entries.append({"file": fname, "sha256": digest})
         manifest = {"format": BLOB_FORMAT, "skeleton": skeleton,
                     "leaves": entries}

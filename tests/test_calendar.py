@@ -1,0 +1,247 @@
+"""Calendar-queue service lanes: the numpy `CalendarLane` fire sets must
+reproduce the heap `EngineService`'s booking schedule exactly — unit
+invariants, a randomized fire-order oracle (hypothesis when available,
+a seeded sweep always), the full-simulation parity grid
+CalendarService == EngineService == dense poll oracle, and a mostly-idle
+N=10k tick-loop parity check."""
+import numpy as np
+import pytest
+
+from repro.fleet import (
+    Backends,
+    EngineService,
+    FedConfig,
+    FleetSimulator,
+    SimConfig,
+)
+from repro.fleet.analytics import AnalyticsConfig
+from repro.fleet.engine import CalendarLane, CalendarService
+
+ENGINE = dict(engine="event", service="scheduler", churn="event")
+CALENDAR = dict(engine="event", service="calendar", churn="event")
+DENSE = dict(engine="dense", service="dense", churn="dense")
+
+GRID = {
+    "clean": {},
+    "faults": dict(p_drop=0.15, p_duplicate=0.05, max_delay=2),
+    "churn": dict(p_leave=0.05, p_return=0.3),
+    "stragglers": dict(straggler_fraction=0.25, straggler_period=8),
+    "everything": dict(
+        p_drop=0.15, p_duplicate=0.05, max_delay=2, p_leave=0.02,
+        p_return=0.3, straggler_fraction=0.25, straggler_period=8,
+    ),
+}
+
+
+# --------------------------------------------------------------------- #
+# lane unit invariants                                                   #
+# --------------------------------------------------------------------- #
+def _collect(fired):
+    def cb(idx, t):
+        fired.append((t, sorted(int(i) for i in idx)))
+    return cb
+
+
+def test_periodic_lane_fires_every_member_once_per_period():
+    fired = []
+    lane = CalendarLane(4, _collect(fired), capacity=8)
+    for i in (0, 3, 5):
+        lane.set_member(i, True)
+    for t in range(1, 13):
+        due = lane.due(t)
+        want = sorted(i for i in (0, 3, 5) if (t + i) % 4 == 0)
+        assert sorted(int(i) for i in due) == want, t
+        lane.fire(t)
+    # 12 ticks / period 4 = 3 firings per member
+    assert sum(len(ids) for _, ids in fired) == 9
+
+
+def test_one_shot_lane_clears_membership_on_fire():
+    fired = []
+    lane = CalendarLane(3, _collect(fired), one_shot=True, capacity=8)
+    lane.set_member(2, True)
+    for t in range(1, 8):
+        lane.fire(t)
+    assert [ids for _, ids in fired if ids] == [[2]]  # fired exactly once
+    assert not lane.member(2)
+
+
+def test_lane_growth_preserves_membership():
+    lane = CalendarLane(5, _collect([]), capacity=2)
+    lane.set_member(1, True)
+    lane.ensure(100)
+    lane.set_member(77, True)
+    assert lane.member(1) and lane.member(77) and not lane.member(50)
+    due = sorted(int(i) for i in lane.due(4))  # (4+1)%5==0, (4+77)%5 != 0
+    assert due == [1]
+
+
+def test_set_member_grows_on_demand():
+    lane = CalendarLane(7, _collect([]), capacity=1)
+    lane.set_member(31, True)
+    assert lane.member(31)
+
+
+# --------------------------------------------------------------------- #
+# fire-order oracle: lane fires == heap bookings over random schedules   #
+# --------------------------------------------------------------------- #
+def _oracle_parity(seed: int, period: int, n: int, ticks: int) -> None:
+    """Random membership toggles between ticks; the lane's due set each
+    tick must equal the heap service's fire set — every powered-on
+    member i fires exactly when (t + i) % period == 0."""
+    rng = np.random.default_rng(seed)
+    fired = []
+    lane = CalendarLane(period, _collect(fired), capacity=n)
+    members = set()
+    for t in range(1, ticks + 1):
+        for i in rng.integers(0, n, size=rng.integers(0, 4)):
+            i = int(i)
+            on = bool(rng.integers(0, 2))
+            lane.set_member(i, on)
+            (members.add if on else members.discard)(i)
+        want = sorted(i for i in members if (t + i) % period == 0)
+        got = sorted(int(i) for i in lane.due(t))
+        assert got == want, (seed, t)
+        lane.fire(t)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_lane_fire_order_matches_heap_oracle_seeded(seed):
+    _oracle_parity(seed, period=int(3 + seed % 5), n=32, ticks=40)
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+except ImportError:  # graceful skip — hypothesis is optional
+    @pytest.mark.skip(reason="property tests need hypothesis")
+    def test_lane_fire_order_matches_heap_oracle():
+        pass
+else:
+    @settings(
+        max_examples=30,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(
+        seed=st.integers(0, 2**16),
+        period=st.integers(1, 16),
+        n=st.integers(1, 64),
+        ticks=st.integers(1, 64),
+    )
+    def test_lane_fire_order_matches_heap_oracle(seed, period, n, ticks):
+        _oracle_parity(seed, period, n, ticks)
+
+
+# --------------------------------------------------------------------- #
+# full-simulation parity: calendar == heap engine == dense poll oracle   #
+# --------------------------------------------------------------------- #
+def _fingerprint(sim, driver):
+    return (
+        driver.w.copy(),
+        (sim.broker.published, sim.broker.delivered, sim.broker.dropped),
+        [r["participants"] for r in driver.history],
+        [r["canceled"] for r in driver.history],
+        [r["pumps"] for r in driver.history],
+        sim.t,
+    )
+
+
+def _run(backends: dict, **overrides):
+    cfg = dict(n_clients=48, seed=17)
+    cfg.update(overrides)
+    sim = FleetSimulator(SimConfig(backends=Backends(**backends), **cfg))
+    driver = sim.run_federated(
+        FedConfig(
+            local_steps=2, local_lr=0.2, deadline_fraction=0.7,
+            deadline_pumps=48,
+        ),
+        dim=16,
+        rounds=3,
+        n_samples=8,
+    )
+    return _fingerprint(sim, driver)
+
+
+def _assert_equal(a, b):
+    assert np.array_equal(a[0], b[0])
+    assert a[1:] == b[1:]
+
+
+@pytest.mark.parametrize("scenario", sorted(GRID))
+def test_calendar_matches_heap_service_bit_for_bit(scenario):
+    knobs = GRID[scenario]
+    cal = _run(CALENDAR, **knobs)
+    _assert_equal(cal, _run(ENGINE, **knobs))
+    _assert_equal(cal, _run(DENSE, **knobs))
+
+
+@pytest.mark.parametrize("seed", [0, 7, 23])
+def test_calendar_parity_across_seeds(seed):
+    knobs = dict(
+        GRID["everything"], seed=seed, n_clients=32, resync_period=8
+    )
+    _assert_equal(_run(CALENDAR, **knobs), _run(ENGINE, **knobs))
+
+
+def test_calendar_analytics_parity():
+    def run(backends):
+        sim = FleetSimulator(SimConfig(
+            n_clients=32, seed=5, scenario="mixed",
+            backends=Backends(**backends), **GRID["everything"],
+        ))
+        drv = sim.run_analytics(
+            AnalyticsConfig(deadline_fraction=0.7, deadline_pumps=32),
+            windows=2, warmup_ticks=6,
+        )
+        return (
+            [(r.window_id, r.participants, r.canceled, r.mean, r.var)
+             for r in drv.history],
+            (sim.broker.published, sim.broker.delivered, sim.broker.dropped),
+            sim.t,
+        )
+
+    assert run(CALENDAR) == run(ENGINE)
+
+
+def test_calendar_service_is_selected_and_is_an_engine_service():
+    sim = FleetSimulator(SimConfig(
+        n_clients=8, seed=0, backends=Backends(service="calendar"),
+    ))
+    assert isinstance(sim.service, CalendarService)
+    assert isinstance(sim.service, EngineService)  # drop-in subclass
+
+
+def test_calendar_requires_the_event_engine():
+    with pytest.raises(ValueError, match="calendar"):
+        FleetSimulator(SimConfig(
+            n_clients=4, seed=0,
+            backends=Backends(service="calendar", engine="dense"),
+        ))
+
+
+# --------------------------------------------------------------------- #
+# mostly-idle mega-fleet: N=10k tick-loop parity                         #
+# --------------------------------------------------------------------- #
+def test_tick_loop_parity_at_10k():
+    """30 mostly-idle ticks over a 10k fleet with churn and stragglers:
+    the calendar and heap services must agree on every externally
+    visible gauge and on the runnable/straggler columns themselves."""
+    def run(service):
+        sim = FleetSimulator(SimConfig(
+            n_clients=10_000, seed=3, p_leave=0.0005, p_return=0.2,
+            straggler_fraction=0.1, resync_period=64, signal_history=4,
+            backends=Backends(service=service),
+        ))
+        for _ in range(30):
+            sim.tick()
+        return (
+            sim.metrics.fleet_gauges(),
+            (sim.broker.published, sim.broker.delivered,
+             sim.broker.dropped),
+            sim.columns.runnable[:10_000].tobytes(),
+            sim.columns.straggler[:10_000].tobytes(),
+            sorted(sim.service._due),
+        )
+
+    assert run("calendar") == run("scheduler")

@@ -21,6 +21,7 @@ from repro.fleet.checkpoint import (
 from repro.train.checkpoint import BlobStore
 
 ENGINE = dict(engine="event", service="scheduler", churn="event")
+CALENDAR = dict(engine="event", service="calendar", churn="event")
 DENSE = dict(engine="dense", service="dense", churn="dense")
 
 GRID = {
@@ -138,13 +139,13 @@ def _golden_analytics(tmp_path, backends, knobs, *, split=2, extra=2):
     assert _dump(_ana_fp(simC, drvC)) == want
 
 
-@pytest.mark.parametrize("backends", [ENGINE, DENSE], ids=["engine", "dense"])
+@pytest.mark.parametrize("backends", [ENGINE, CALENDAR, DENSE], ids=["engine", "calendar", "dense"])
 @pytest.mark.parametrize("scenario", sorted(GRID))
 def test_golden_restore_federated(scenario, backends, tmp_path):
     _golden_federated(tmp_path, backends, GRID[scenario])
 
 
-@pytest.mark.parametrize("backends", [ENGINE, DENSE], ids=["engine", "dense"])
+@pytest.mark.parametrize("backends", [ENGINE, CALENDAR, DENSE], ids=["engine", "calendar", "dense"])
 @pytest.mark.parametrize("scenario", ["clean", "everything"])
 def test_golden_restore_analytics(scenario, backends, tmp_path):
     _golden_analytics(tmp_path, backends, GRID[scenario])
@@ -179,7 +180,7 @@ def test_checkpoint_at_tick_zero(tmp_path):
 # --------------------------------------------------------------------- #
 # mid-round: tasks in flight when the world freezes                      #
 # --------------------------------------------------------------------- #
-@pytest.mark.parametrize("backends", [ENGINE, DENSE], ids=["engine", "dense"])
+@pytest.mark.parametrize("backends", [ENGINE, CALENDAR, DENSE], ids=["engine", "calendar", "dense"])
 @pytest.mark.parametrize("steps", [0, 3])
 def test_midround_checkpoint_federated(backends, steps, tmp_path):
     knobs = GRID["everything"]
@@ -213,7 +214,7 @@ def test_midround_checkpoint_federated(backends, steps, tmp_path):
     assert _dump(got) == want
 
 
-@pytest.mark.parametrize("backends", [ENGINE, DENSE], ids=["engine", "dense"])
+@pytest.mark.parametrize("backends", [ENGINE, CALENDAR, DENSE], ids=["engine", "calendar", "dense"])
 def test_midround_checkpoint_analytics(backends, tmp_path):
     knobs = dict(GRID["everything"], scenario="mixed")
     simA = FleetSimulator(_cfg(backends, **knobs))
@@ -406,6 +407,57 @@ def test_blobstore_dedups_identical_leaves(tmp_path):
     a = np.ones((4, 4), np.float32)
     store.put("x", [a, a.copy(), {"again": a}])
     assert len(list((tmp_path / "blobs").glob("*.npy"))) == 1
+
+
+def test_blobstore_link_from_hardlinks_unchanged_leaves(tmp_path):
+    prev = BlobStore(tmp_path / "prev")
+    a = np.arange(16, dtype=np.float32)
+    b = np.ones(8, np.float64)
+    prev.put("x", {"a": a, "b": b})
+    nxt = BlobStore(tmp_path / "next")
+    nxt.put("x", {"a": a, "b": b + 1}, link_from=prev)
+    inode = {p.name: p.stat().st_ino for p in (tmp_path / "prev").glob("*.npy")}
+    for p in (tmp_path / "next").glob("*.npy"):
+        if p.name in inode:  # unchanged leaf: same inode, not a rewrite
+            assert p.stat().st_ino == inode[p.name], p.name
+    # exactly one leaf (b+1) is new to the next store
+    new = {p.name for p in (tmp_path / "next").glob("*.npy")} - set(inode)
+    assert len(new) == 1
+    out = nxt.get("x")
+    assert np.array_equal(out["a"], a)
+    assert np.array_equal(out["b"], b + 1)
+
+
+# --------------------------------------------------------------------- #
+# incremental fleet saves: unchanged arrays hardlink to the previous     #
+# checkpoint; identical states produce identical manifests               #
+# --------------------------------------------------------------------- #
+def test_incremental_fleet_checkpoint_reuses_inodes(tmp_path):
+    sim = FleetSimulator(_cfg(CALENDAR, **GRID["everything"]))
+    drv = sim.run_federated(FED, dim=16, rounds=1, n_samples=8)
+    FleetCheckpoint.save(sim, tmp_path / "ck0", driver=drv)
+    drv = sim.run_federated(FED, rounds=1, driver=drv)
+    FleetCheckpoint.save(sim, tmp_path / "ck1", driver=drv,
+                         previous=tmp_path / "ck0")
+    prev = {p.name: p.stat().st_ino
+            for p in (tmp_path / "ck0" / "arrays").glob("*.npy")}
+    shared = 0
+    for p in (tmp_path / "ck1" / "arrays").glob("*.npy"):
+        if p.name in prev:
+            assert p.stat().st_ino == prev[p.name], p.name
+            shared += 1
+    # plenty of per-client state is untouched between adjacent rounds
+    assert shared > 0
+    # a same-state re-save produces a byte-identical manifest
+    FleetCheckpoint.save(sim, tmp_path / "ck1b", driver=drv,
+                         previous=tmp_path / "ck1")
+    assert (
+        (tmp_path / "ck1" / "manifest.json").read_bytes()
+        == (tmp_path / "ck1b" / "manifest.json").read_bytes()
+    )
+    # and the incremental chain still restores bit-for-bit
+    sim2, drv2, _ = FleetCheckpoint.restore(tmp_path / "ck1")
+    assert _dump(_fed_fp(sim2, drv2)) == _dump(_fed_fp(sim, drv))
 
 
 # --------------------------------------------------------------------- #

@@ -1,0 +1,158 @@
+"""Columnar per-client arena: `FleetColumns` row allocation/growth/
+snapshot contracts, arena-backed `ClientRecord`/`EdgeClient` scalars
+staying bit-compatible with the unbound (local) fallback, `deep_sizeof`
+accounting, `FleetMetrics.fleet_gauges`, and the simulator's
+`memory_report` breakdown."""
+import numpy as np
+import pytest
+
+from repro.core.columns import COLUMN_SPECS, FleetColumns, deep_sizeof
+from repro.core.statestore import ClientRecord, StateStore
+from repro.fleet import Backends, FleetSimulator, SimConfig
+
+
+# --------------------------------------------------------------------- #
+# arena contracts                                                        #
+# --------------------------------------------------------------------- #
+def test_row_allocation_is_stable_and_defaulted():
+    cols = FleetColumns(2)
+    a = cols.row_for("veh-000")
+    b = cols.row_for("veh-001")
+    assert (a, b) == (0, 1)
+    assert cols.row_for("veh-000") == 0  # idempotent
+    assert cols.row_of("veh-007") is None
+    cols.clock[a] = 41
+    assert cols.n_rows == 2
+    assert bool(cols.online[b]) and not bool(cols.runnable[b])
+
+
+def test_growth_preserves_data_and_is_geometric():
+    cols = FleetColumns(1)
+    cols.row_for("x")
+    cols.clock[0] = 9
+    cols.ensure(50)
+    assert cols.capacity >= 50
+    assert int(cols.clock[0]) == 9 and cols.row_of("x") == 0
+    cap = cols.capacity
+    cols.ensure(cap)  # no-op within capacity
+    assert cols.capacity == cap
+
+
+def test_snapshot_load_roundtrip():
+    cols = FleetColumns(4)
+    for i in range(3):
+        cols.row_for(f"veh-{i:03d}")
+    cols.clock[:3] = [5, 6, 7]
+    cols.unacked[1] = 2
+    cols.straggler[2] = True
+    snap = cols.snapshot()
+    assert set(snap) == set(COLUMN_SPECS)
+    assert snap["clock"].shape == (3,)
+
+    other = FleetColumns(1)
+    other.load(snap, ["veh-000", "veh-001", "veh-002"])
+    assert other.n_rows == 3
+    assert other.row_of("veh-002") == 2
+    assert list(other.clock[:3]) == [5, 6, 7]
+    assert int(other.unacked[1]) == 2 and bool(other.straggler[2])
+    assert other.nbytes() == sum(
+        other.capacity * dt.itemsize for dt in COLUMN_SPECS.values()
+    )
+
+
+# --------------------------------------------------------------------- #
+# arena-backed viewers == local-scalar fallback                          #
+# --------------------------------------------------------------------- #
+def test_client_record_dispatches_through_the_arena():
+    rec = ClientRecord("veh-000", logical_clock=3, online=False)
+    assert rec.logical_clock == 3 and rec.online is False
+    cols = FleetColumns(2)
+    rec.bind(cols)  # locals move into the arena
+    assert int(cols.clock[0]) == 3 and not bool(cols.online[0])
+    rec.logical_clock = 8
+    rec.online = True
+    assert int(cols.clock[0]) == 8 and bool(cols.online[0])
+    assert rec.logical_clock == 8 and rec.online is True
+    assert "veh-000" in repr(rec)
+
+
+def test_statestore_attach_columns_binds_existing_and_future_records():
+    store = StateStore()
+    store.register_client("veh-000")
+    cols = FleetColumns(2)
+    store.attach_columns(cols)
+    store.register_client("veh-001")
+    store._bump_clock("veh-000")
+    assert int(cols.clock[cols.row_of("veh-000")]) >= 1
+    assert cols.n_rows == 2
+
+
+def test_simulator_threads_one_arena_through_every_layer():
+    sim = FleetSimulator(SimConfig(
+        n_clients=6, seed=0, straggler_fraction=0.5,
+        backends=Backends(service="calendar"),
+    ))
+    assert sim.store.columns is sim.columns
+    assert sim.metrics.columns is sim.columns
+    assert sim.pool.columns is sim.columns
+    assert sim.columns.n_rows == 6
+    # vehicle index == arena row (by construction order)
+    for cid, v in sim.pool.vehicles.items():
+        assert sim.columns.row_of(cid) == v.metadata["index"]
+    g = sim.metrics.fleet_gauges()
+    assert g["clients"] == 6 and g["online"] == 6
+    assert g["stragglers"] == 3
+    cid = next(iter(sim.pool.vehicles))
+    sim.pool.power_off(cid)
+    assert sim.metrics.fleet_gauges()["online"] == 5
+
+
+def test_fleet_gauges_empty_without_an_arena():
+    from repro.fleet.metrics import FleetMetrics
+    assert FleetMetrics().fleet_gauges() == {}
+
+
+# --------------------------------------------------------------------- #
+# deep_sizeof + memory_report                                            #
+# --------------------------------------------------------------------- #
+def test_deep_sizeof_counts_numpy_buffers_and_memoizes_sharing():
+    arr = np.zeros(1000, np.float64)
+    assert deep_sizeof(arr) >= arr.nbytes
+    # the same array reachable twice is billed once
+    assert deep_sizeof([arr, arr]) < 2 * arr.nbytes
+
+
+def test_deep_sizeof_walks_slots_and_dicts():
+    class Slotted:
+        __slots__ = ("a", "b")
+
+        def __init__(self):
+            self.a = np.zeros(500, np.int64)
+            self.b = "x" * 100
+
+    s = Slotted()
+    assert deep_sizeof(s) >= s.a.nbytes + 100
+    assert deep_sizeof({"k": s}) >= s.a.nbytes
+
+
+def test_memory_report_categories_cover_the_total():
+    sim = FleetSimulator(SimConfig(n_clients=16, seed=1))
+    rep = sim.memory_report()
+    cats = ("plane", "columns", "docs", "queues", "clients", "other")
+    assert rep["n_clients"] == 16
+    assert all(rep[c] >= 0 for c in cats)
+    assert rep["total"] == sum(rep[c] for c in cats)
+    assert rep["bytes_per_client"] == pytest.approx(rep["total"] / 16)
+    assert rep["columns"] >= sim.columns.nbytes()
+    table = FleetSimulator.format_memory_report(rep)
+    assert "bytes/client" in table and "columns" in table
+
+
+def test_slotted_control_plane_objects_reject_stray_attributes():
+    sim = FleetSimulator(SimConfig(n_clients=2, seed=0))
+    v = next(iter(sim.pool.vehicles.values()))
+    with pytest.raises(AttributeError):
+        v.client.some_new_attribute = 1
+    rec = sim.store.register_client(next(iter(sim.pool.vehicles)))
+    with pytest.raises(AttributeError):
+        rec.some_new_attribute = 1

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core.plane_sharded import ShardedSignalPlane
-from repro.core.signals import SignalHandler
+from repro.core.signals import FleetSignalPlane, SignalHandler
 from repro.fleet import FedConfig, FleetSimulator, SimConfig
 from repro.fleet.scenarios import SIGNALS, Scenario, build_plane
 from repro.sharding import fleet as fleet_sharding
@@ -155,11 +155,45 @@ def test_spare_capacity_rows_fail_fast():
             sharded.set_online(bad, False)
 
 
-def test_trace_and_csv_stay_on_the_host_plane():
+def test_traces_stay_on_the_host_plane():
     with pytest.raises(NotImplementedError, match="scenario-backed"):
         ShardedSignalPlane.from_trace(SIGNALS, np.zeros((1, 2, 4)))
-    with pytest.raises(NotImplementedError, match="scenario-backed"):
-        ShardedSignalPlane.from_csv_fleet(["a\n1\n"])
+
+
+# --------------------------------------------------------------------- #
+# CSV playback: streamed host rows fed into the sharded ring             #
+# --------------------------------------------------------------------- #
+_CSVS = [
+    "a,b\n1,2\n,3\n4,\n7,8\n",   # blanks hold the previous value
+    "a,c\n5,\n,9\n",             # short trace: holds its last row
+    "b\n\n6\n",                  # blank line, late first observation
+]
+
+
+def test_sharded_csv_plane_matches_host_plane_bit_for_bit():
+    host = FleetSignalPlane.from_csv_fleet(_CSVS)
+    shard = ShardedSignalPlane.from_csv_fleet(_CSVS)
+    assert shard.names == host.names
+    assert shard.n_clients == host.n_clients == len(_CSVS)
+    shard.set_online(1, False)
+    host.set_online(1, False)
+    for t in range(6):  # runs past the longest trace (4 ticks)
+        for i in range(host.n_clients):
+            for name in host.names:
+                assert shard.read(i, name) == host.read(i, name), (t, i, name)
+                assert shard.window(i, name, 5) == host.window(i, name, 5)
+        if t == 2:
+            shard.set_online(1, True)
+            host.set_online(1, True)
+        host.step()
+        shard.step()
+    assert np.array_equal(shard.values, host.values, equal_nan=True)
+
+
+def test_sharded_csv_plane_is_fixed_size():
+    shard = ShardedSignalPlane.from_csv_fleet(["a\n1\n2\n"])
+    with pytest.raises(ValueError, match="fixed fleet size"):
+        shard.add_client()
 
 
 def test_build_plane_selects_and_rejects():

@@ -175,6 +175,59 @@ def test_csv_fleet_plane_aligns_union_of_columns():
 
 
 # --------------------------------------------------------------------- #
+# streamed CSV ingestion: bit-for-bit with the materializing oracle      #
+# --------------------------------------------------------------------- #
+_PARITY_CSVS = [
+    "a,b\n1,2\n,3\n4,\n7,8\n",      # blanks hold the previous value
+    "a,c\n5,\n,9\n",                # short trace: holds its last row
+    "b\n\n6\n",                     # blank line, late first observation
+    "d\n\n",                        # header-only: never observes anything
+]
+
+
+def test_streamed_csv_plane_matches_materializing_oracle():
+    streamed = FleetSignalPlane.from_csv_fleet(_PARITY_CSVS, history=8)
+    oracle = FleetSignalPlane.from_csv_fleet(
+        _PARITY_CSVS, history=8, streamed=False
+    )
+    assert streamed.names == oracle.names
+    assert streamed.n_clients == oracle.n_clients
+    streamed.set_online(2, False)
+    oracle.set_online(2, False)
+    for t in range(7):  # runs past the longest trace (4 ticks)
+        for i in range(oracle.n_clients):
+            for name in oracle.names:
+                assert streamed.read(i, name) == oracle.read(i, name), (
+                    t, i, name,
+                )
+                assert streamed.window(i, name, 6) == oracle.window(
+                    i, name, 6
+                )
+        if t == 2:
+            streamed.set_online(2, True)
+            oracle.set_online(2, True)
+        streamed.step()
+        oracle.step()
+    assert np.array_equal(streamed.values, oracle.values, equal_nan=True)
+    assert np.array_equal(
+        streamed._hist, oracle._hist, equal_nan=True
+    )
+
+
+def test_streamed_csv_plane_validates_eagerly_like_the_oracle():
+    # cell errors surface at construction, not first playback of the row
+    for bad in ("a,b\n1\n", "a\nx\n", "", "a,a\n1,2\n"):
+        with pytest.raises(ValueError):
+            FleetSignalPlane.from_csv_fleet(["a\n1\n", bad])
+
+
+def test_streamed_csv_plane_is_fixed_size_like_the_oracle():
+    plane = FleetSignalPlane.from_csv_fleet(["a\n1\n2\n"])
+    with pytest.raises(ValueError, match="fixed fleet size"):
+        plane.add_client()
+
+
+# --------------------------------------------------------------------- #
 # bugfix: offline rows are NaN-masked in the history ring                #
 # --------------------------------------------------------------------- #
 def test_offline_rows_are_nan_masked_in_history_ring():
