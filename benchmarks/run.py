@@ -179,7 +179,7 @@ def main() -> None:
             sys.stdout.flush()
         rows.extend(new_rows)
 
-    from benchmarks import fleet_scale, table2_latency, table3_memory
+    from benchmarks import fleet_scale, serve_load, table2_latency, table3_memory
 
     emit(table2_latency.rows(n=20 if fast else 100))
     emit(table3_memory.rows())
@@ -187,6 +187,9 @@ def main() -> None:
     emit(_kernel_rows(fast))
     fleet_rows, speedups = fleet_scale.rows(fast)
     emit(fleet_rows)
+    serve_rows, serve_speedups = serve_load.rows(fast)
+    emit(serve_rows)
+    speedups = {**speedups, "serve": serve_speedups}
     try:
         from benchmarks import roofline
 
@@ -195,9 +198,17 @@ def main() -> None:
         print(f"roofline/skipped,0,run repro.launch.dryrun first ({e})")
 
     # perf-regression guard: a vectorized fleet path (batched aggregation,
-    # columnar/sharded signal-plane step) losing to its per-client Python
-    # loop fails the whole benchmark run (and with it CI)
+    # columnar/sharded signal-plane step, the gateway's cached-fold read
+    # path) losing to its per-client baseline fails the whole benchmark
+    # run (and with it CI)
     err = fleet_scale.check_guard(speedups, fast=fast)
+    if err is None:
+        err = serve_load.check_guard(serve_speedups, fast=fast)
+    if os.environ.get("BENCH_FORCE_GUARD_FAIL"):
+        # CI plumbing self-test: prove a guard failure actually fails the
+        # job (the bench-smoke step pipes through `tee`, which without
+        # pipefail swallows this exit code — see .github/workflows/ci.yml)
+        err = err or "forced failure (BENCH_FORCE_GUARD_FAIL is set)"
     for line in trend_rows(speedups, args.baseline):
         print(line)
     if args.json:

@@ -1,0 +1,228 @@
+"""Closed-loop analyst load against the fleet gateway (ROADMAP item 5).
+
+Many concurrent `AnalystSession`s, each keeping exactly one request in
+flight against a running `FleetSimulator` fronted by
+`repro.serve.FleetGateway`: a session fires its next query the moment
+the previous response lands (closed-loop load, so the offered rate
+tracks service capacity instead of overrunning it). The request mix
+cycles dashboard gauges, platform doc counts, fleet-level window
+statistics, percentile queries, and per-vehicle signal windows — the
+read side of the paper's analyst workflow.
+
+Two sections, CSV rows like the rest of the harness:
+
+* ``serve/read_*`` — per-query cost of the statistics read path at
+  N=10k: the gateway's answer out of the *cached per-tick sketch fold*
+  (`FleetSignalPlane.fleet_sketch` — one device fold per tick shared by
+  every analyst and every vehicle payload) vs the same answer with the
+  cache defeated (a fresh `compute_sketches` device fold per query —
+  what serving would cost without the cache). The cached path must win
+  by >= 3x in BOTH modes (CI guard): the gap is asymptotic — O(N)
+  merge of an already-folded sketch block vs a full ring fold — so it
+  holds at the benchmarked N even on throttled shared runners.
+* ``serve/closed_loop_*`` — end-to-end gateway throughput: S analyst
+  sessions in closed loop over a 10k-vehicle fleet (100k too in full
+  mode), admissions capped per tick boundary so backpressure turns into
+  queueing delay. Reports queries/sec (wall) and p50/p99 response
+  latency in world ticks. Informational — wall-clock throughput races
+  the runner, so the hard floor stays on the read-path ratio above.
+
+Run: ``PYTHONPATH=src python -m benchmarks.serve_load [--fast]``
+(exits non-zero if the cached read path loses its floor).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.fleet_scale import _time_pair
+
+#: fleet size for the guarded read-path ratio and the fast closed loop —
+#: the ISSUE-10 acceptance bar is N >= 10k
+SERVE_N = 10_000
+#: full mode also drives the closed loop at campaign scale
+SERVE_N_FULL = 100_000
+#: concurrent analyst sessions in the closed loop
+SERVE_SESSIONS = 32
+#: responses collected per closed-loop run
+SERVE_QUERIES_FAST, SERVE_QUERIES = 160, 480
+#: admissions per tick boundary: < SESSIONS so overload shows up as
+#: deterministic queueing delay (the p99 - p50 spread), not tick blowup
+SERVE_ADMIT_PER_TICK = 8
+#: signal the statistics queries sketch, and its windowing
+SERVE_SIGNAL = "Vehicle.FuelRate"
+SERVE_WINDOW = 64
+#: history ring depth: enough for the window plus slack, small enough
+#: that the 100k build stays cheap
+SERVE_HISTORY = 96
+#: mostly-idle service so ticks cost O(due), not O(N)
+SERVE_RESYNC = 64
+#: acceptance floor for the cached-fold read path vs a per-query fold —
+#: a hard floor in BOTH modes (asymptotic gap, see module docstring)
+SERVE_READ_TARGET_SPEEDUP = 3.0
+
+#: the closed-loop request mix each session cycles through (index-driven,
+#: so a trace is a pure function of session count and query budget)
+_MIX = ("gauges", "fleet_stats", "quantile", "window", "platform")
+
+
+def _build(n: int):
+    from repro.fleet.simulator import Backends, FleetSimulator, SimConfig
+    from repro.serve.gateway import FleetGateway
+
+    sim = FleetSimulator(
+        SimConfig(
+            n_clients=n,
+            seed=3,
+            scenario="mixed",
+            signal_history=SERVE_HISTORY,
+            resync_period=SERVE_RESYNC,
+            backends=Backends(service="calendar"),
+        )
+    )
+    for _ in range(SERVE_WINDOW + 4):  # fill the window every query reads
+        sim.tick()
+    return sim, FleetGateway(sim, admit_per_tick=SERVE_ADMIT_PER_TICK)
+
+
+def _issue(sess, i: int, n: int):
+    """One request from the deterministic mix (i = the session's query
+    counter): statistics reads dominate, vehicle reads rotate rows."""
+    kind = _MIX[i % len(_MIX)]
+    if kind == "fleet_stats":
+        return sess.fleet_stats(SERVE_SIGNAL, window=SERVE_WINDOW)
+    if kind == "quantile":
+        return sess.quantile(SERVE_SIGNAL, 0.9, window=SERVE_WINDOW)
+    if kind == "window":
+        return sess.window((37 * i) % n, SERVE_SIGNAL, 8)
+    return sess.ask(kind)
+
+
+def read_path_rows(
+    fast: bool,
+) -> tuple[list[tuple[str, float, str]], dict[int, float]]:
+    """The guarded ratio: one analyst statistics query served from the
+    per-tick sketch cache vs the same query with the cache defeated
+    (every query pays its own `compute_sketches` ring fold)."""
+    n = SERVE_N
+    reps = 3 if fast else 5
+    sim, gw = _build(n)
+    plane = sim.plane
+    params = {"signal": SERVE_SIGNAL, "q": 0.9, "window": SERVE_WINDOW}
+
+    def cached() -> dict:
+        return gw._read_quantile(params)
+
+    def cold() -> dict:
+        plane._sketch_cache.clear()
+        gw._stats_cache.clear()
+        return gw._read_quantile(params)
+
+    warm = cold()  # compile the fold + merges, prime the cache
+    assert cached() == warm, "cached read diverged from the cold fold"
+    t_cold, t_cached = _time_pair(cold, cached, reps)
+    speedups = {n: t_cold / t_cached}
+    return [
+        (
+            f"serve/read_cold_fold_N{n}",
+            t_cold,
+            f"per-query ring fold, no cache, W={SERVE_WINDOW}",
+        ),
+        (
+            f"serve/read_cached_N{n}",
+            t_cached,
+            f"{speedups[n]:.1f}x vs per-query fold "
+            f"(one shared fold per tick)",
+        ),
+    ], speedups
+
+
+def closed_loop_rows(fast: bool) -> list[tuple[str, float, str]]:
+    """S sessions, one request in flight each, over the N=10k fleet
+    (100k too in full mode): queries/sec and response-tick percentiles
+    under the per-tick admission cap."""
+    sizes = (SERVE_N,) if fast else (SERVE_N, SERVE_N_FULL)
+    total = SERVE_QUERIES_FAST if fast else SERVE_QUERIES
+    rows = []
+    for n in sizes:
+        sim, gw = _build(n)
+        sessions = [gw.session(f"load-{s}") for s in range(SERVE_SESSIONS)]
+        counters = dict.fromkeys(range(SERVE_SESSIONS), 0)
+        tickets: dict[int, object] = {}
+        latencies: list[int] = []
+        issued = 0
+        t0 = time.perf_counter()
+        for s in range(SERVE_SESSIONS):
+            tickets[s] = _issue(sessions[s], 0, n)
+            counters[s] = 1
+            issued += 1
+        while len(latencies) < total:
+            gw.tick()
+            for s in range(SERVE_SESSIONS):
+                t = tickets.get(s)
+                if t is None or not t.done:
+                    continue
+                latencies.append(t.response.ticks)
+                if issued < total:
+                    tickets[s] = _issue(sessions[s], counters[s], n)
+                    counters[s] += 1
+                    issued += 1
+                else:
+                    tickets[s] = None
+        wall = time.perf_counter() - t0
+        lat = np.asarray(latencies[:total], np.float64)
+        qps = total / max(wall, 1e-9)
+        rows.append(
+            (
+                f"serve/closed_loop_N{n}_S{SERVE_SESSIONS}",
+                wall / total * 1e6,
+                f"{qps:.0f} queries/s closed-loop, response ticks "
+                f"p50={np.percentile(lat, 50):.0f} "
+                f"p99={np.percentile(lat, 99):.0f}, "
+                f"admit cap {SERVE_ADMIT_PER_TICK}/tick",
+            )
+        )
+    return rows
+
+
+def rows(
+    fast: bool,
+) -> tuple[list[tuple[str, float, str]], dict[int, float]]:
+    """All serve rows plus the guarded read-path speedup, keyed by N
+    (the ``serve`` section of the benchmark JSON)."""
+    read_rows, speedups = read_path_rows(fast)
+    return read_rows + closed_loop_rows(fast), speedups
+
+
+def check_guard(speedups: dict[int, float], *, fast: bool) -> str | None:
+    """Hard floor in BOTH modes: the cached-fold analyst read path must
+    beat a per-query ring fold by >= 3x (see module docstring)."""
+    n_max = max(speedups)
+    if speedups[n_max] < SERVE_READ_TARGET_SPEEDUP:
+        return (
+            f"gateway cached-fold read path speedup at N={n_max} is "
+            f"{speedups[n_max]:.1f}x < "
+            f"{SERVE_READ_TARGET_SPEEDUP:.0f}x floor"
+        )
+    return None
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="CI smoke sizes")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    all_rows, speedups = rows(args.fast)
+    for name, us, derived in all_rows:
+        print(f"{name},{us:.2f},{derived}")
+    err = check_guard(speedups, fast=args.fast)
+    if err:
+        print(f"serve/guard_failed,0,{err}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Render the bench-smoke run as a GitHub Actions step summary.
+
+Reads the machine-readable benchmark artifact (``BENCH_fast.json``,
+written by ``benchmarks.run --json``) plus the committed baseline and
+prints a markdown report — guard verdict, guarded-speedup trend table,
+and the full row dump in a collapsed section. CI appends the output to
+``$GITHUB_STEP_SUMMARY`` so the perf trajectory is readable from the
+run page without downloading artifacts.
+
+Degrades instead of failing: the summary step runs ``if: always()`` and
+must never turn a green run red (or hide a red one) — a missing or
+unreadable artifact becomes a note in the summary, exit code 0.
+
+Run: ``PYTHONPATH=src python -m benchmarks.step_summary --json BENCH_fast.json``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.run import DEFAULT_BASELINE
+
+
+def _load(path: str) -> dict | None:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def trend_table(cur: dict, base: dict | None) -> list[str]:
+    """One row per guarded speedup: current vs the committed baseline."""
+    lines = [
+        "| section | N | speedup | baseline | delta |",
+        "|---|---:|---:|---:|---:|",
+    ]
+    base_sp = (base or {}).get("speedups", {})
+    for section, per_n in sorted(cur.get("speedups", {}).items()):
+        for n, val in sorted(per_n.items(), key=lambda kv: int(kv[0])):
+            ref = base_sp.get(section, {}).get(n)
+            if ref is None:
+                lines.append(
+                    f"| {section} | {n} | {val:.2f}x | — | new |"
+                )
+            else:
+                delta = (val / ref - 1.0) * 100.0
+                lines.append(
+                    f"| {section} | {n} | {val:.2f}x | {ref:.2f}x "
+                    f"| {delta:+.0f}% |"
+                )
+    return lines
+
+
+def row_dump(cur: dict) -> list[str]:
+    rows = cur.get("rows", [])
+    lines = [
+        "<details>",
+        f"<summary>All rows ({len(rows)})</summary>",
+        "",
+        "| metric | best-of-k | derived |",
+        "|---|---:|---|",
+    ]
+    for r in rows:
+        us = r["best_of_k_seconds"] * 1e6
+        t = f"{us / 1e6:.2f} s" if us >= 1e6 else (
+            f"{us / 1e3:.2f} ms" if us >= 1e3 else f"{us:.2f} us"
+        )
+        derived = str(r["derived"]).replace("|", "\\|")
+        lines.append(f"| {r['metric']} | {t} | {derived} |")
+    lines += ["", "</details>"]
+    return lines
+
+
+def render(json_path: str, baseline_path: str) -> str:
+    cur = _load(json_path)
+    if cur is None:
+        return (
+            "## Benchmark smoke\n\n"
+            f"No benchmark artifact at `{json_path}` — the bench run "
+            "failed before writing results (see the step log).\n"
+        )
+    base = _load(baseline_path)
+    err = cur.get("guard_error")
+    verdict = (
+        f":x: **guard failed** — {err}" if err
+        else ":white_check_mark: guards passed"
+    )
+    lines = [
+        f"## Benchmark smoke ({cur.get('mode', '?')} mode)",
+        "",
+        verdict,
+        "",
+        "### Guarded speedups vs committed baseline",
+        "",
+    ]
+    lines += trend_table(cur, base)
+    if base is None:
+        lines += ["", f"_(no baseline at `{baseline_path}`)_"]
+    lines += [""] + row_dump(cur) + [""]
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_fast.json",
+                    help="benchmark artifact written by benchmarks.run")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed baseline for the delta column")
+    args = ap.parse_args()
+    print(render(args.json, args.baseline))
+
+
+if __name__ == "__main__":
+    main()

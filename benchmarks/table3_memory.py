@@ -30,7 +30,7 @@ def run() -> dict[str, float]:
 
     user = User(server, broker)
     payload = user.payload(BURST_PAYLOAD)
-    assigns = [
+    _assigns = [  # bound so the 50 live assignments stay in the heap
         user.assignment(f"b{i}", [user.task("veh-0", payload)]).commit()
         for i in range(50)
     ]

@@ -35,7 +35,7 @@ import heapq
 from repro.core.counter import Counter
 import threading
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Iterator
 
 

@@ -466,21 +466,28 @@ class FleetSignalPlane:
         )
         return _sk.sketches_from_device(spec, np.asarray(out)[:, :n])
 
-    def sketch_row(self, row: int, name: str, spec) -> dict:
-        """One vehicle's windowed sketch, served from a fleet-wide cache:
-        the first vehicle to ask at a given (tick, fleet size) triggers
-        one `compute_sketches` call; every other vehicle's payload that
-        tick is an O(1) dict build. The key carries `t` and `n_clients`
-        so `step()`/`add_client` invalidate for free (`set_online` only
-        affects *future* ring writes, so it doesn't need to)."""
-        row = self._check_row(row)
+    def fleet_sketch(self, name: str, spec):
+        """The fleet-wide sketch fold, served from the per-tick cache:
+        the first caller at a given (tick, fleet size) triggers one
+        `compute_sketches` call; every other caller that tick — another
+        vehicle's payload, an analyst's gateway query — gets the cached
+        `FleetSketches` back without touching the ring. The key carries
+        `t` and `n_clients` so `step()`/`add_client` invalidate for free
+        (`set_online` only affects *future* ring writes, so it doesn't
+        need to)."""
         key = (self.t, self.n_clients, name, spec)
         sk = self._sketch_cache.get(key)
         if sk is None:
             self._sketch_cache.clear()
             sk = self.compute_sketches(name, spec)
             self._sketch_cache[key] = sk
-        return sk.row(row)
+        return sk
+
+    def sketch_row(self, row: int, name: str, spec) -> dict:
+        """One vehicle's windowed sketch out of the cached fleet-wide
+        fold (`fleet_sketch`) — an O(1) dict build on every cache hit."""
+        row = self._check_row(row)
+        return self.fleet_sketch(name, spec).row(row)
 
     def view(self, row: int) -> "PlaneSignalView":
         return PlaneSignalView(self, self._check_row(row))

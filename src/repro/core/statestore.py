@@ -185,6 +185,21 @@ class StateStore:
         with self._lock:
             self._require_client(client_id).online = online
 
+    def doc_counts(self) -> dict[str, int]:
+        """O(1) platform-inventory gauge: how many documents of each kind
+        the store holds (``result_streams`` = tasks with >= 1 recorded
+        result). The serve gateway's ``platform`` query reads this — dict
+        `len` is constant-time, so the read never scans a collection."""
+        with self._lock:
+            return {
+                "clients": len(self._clients),
+                "payloads": len(self._payloads),
+                "parameters": len(self._parameters),
+                "assignments": len(self._assignments),
+                "tasks": len(self._tasks),
+                "result_streams": len(self._results),
+            }
+
     def online_clients(self) -> list[str]:
         with self._lock:
             return sorted(c.client_id for c in self._clients.values() if c.online)

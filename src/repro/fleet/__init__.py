@@ -9,6 +9,7 @@ from repro.fleet.analytics import (
 from repro.fleet.checkpoint import CheckpointError, FleetCheckpoint
 from repro.fleet.churn import DenseChurn, EventChurn, geometric_gap, make_churn
 from repro.fleet.engine import (
+    PHASE_ADMIT,
     PHASE_CHURN,
     PHASE_SERVICE,
     PHASE_TIMER,
@@ -55,7 +56,7 @@ __all__ = [
     "EngineBackend", "EngineService", "ErrorFeedback", "EventChurn",
     "EventEngine", "FedConfig", "FederatedDriver", "FleetCheckpoint",
     "FleetMetrics", "FleetPool", "FleetServiceScheduler", "FleetSimulator",
-    "PHASE_CHURN", "PHASE_SERVICE", "PHASE_TIMER", "PLANES",
+    "PHASE_ADMIT", "PHASE_CHURN", "PHASE_SERVICE", "PHASE_TIMER", "PLANES",
     "PlaneBackend", "RoundInFlight", "RoundMetrics", "SCENARIOS",
     "SIGNALS", "Scenario", "ServiceBackend", "ShardedSignalPlane",
     "SimConfig", "WindowInFlight", "WindowStats", "aggregate_deltas",

@@ -46,8 +46,12 @@ if TYPE_CHECKING:  # pragma: no cover
     from repro.fleet.elastic import FleetPool
 
 #: same-tick phase order — the legacy tick applied churn toggles first,
-#: then serviced clients; timers (round deadlines) observe both
-PHASE_CHURN, PHASE_SERVICE, PHASE_TIMER = 0, 1, 2
+#: then serviced clients; timers (round deadlines) observe both.
+#: PHASE_ADMIT runs before everything: the fleet query gateway
+#: (`repro.serve.gateway`) drains analyst requests there, so reads see
+#: the between-ticks snapshot and submissions commit before this tick's
+#: churn toggles or service sweep can observe them.
+PHASE_ADMIT, PHASE_CHURN, PHASE_SERVICE, PHASE_TIMER = -1, 0, 1, 2
 
 
 class Entry:
@@ -253,10 +257,11 @@ class EventEngine:
         fired = 0
         heap = self._heap
         try:
-            # overdue entries and this tick's churn toggles first: lane
-            # membership must reflect every power transition at tick t
+            # overdue entries, this tick's gateway admissions, and this
+            # tick's churn toggles first: lane membership must reflect
+            # every power transition at tick t
             while heap and (
-                heap[0][0] < t or (heap[0][0] == t and heap[0][1] == PHASE_CHURN)
+                heap[0][0] < t or (heap[0][0] == t and heap[0][1] <= PHASE_CHURN)
             ):
                 entry = heapq.heappop(heap)[4]
                 if entry.canceled:

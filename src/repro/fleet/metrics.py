@@ -65,6 +65,19 @@ class RoundProgress:
     def completion(self) -> float:
         return self.finished / max(1, self.total)
 
+    def to_dict(self) -> dict[str, int | float]:
+        """JSON-shaped snapshot — the serve gateway's ``progress`` reads
+        return exactly this, so dashboards and tests share one schema."""
+        return {
+            "round": self.round,
+            "total": self.total,
+            "finished": self.finished,
+            "error": self.error,
+            "canceled": self.canceled,
+            "active": self.active,
+            "completion": self.completion,
+        }
+
 
 @dataclass
 class FleetMetrics:

@@ -18,11 +18,9 @@ from __future__ import annotations
 
 import base64
 import dataclasses
-import json
 import math
 from typing import Any, Callable
 
-import jax
 import numpy as np
 
 from repro.core.documents import TaskStatus

@@ -28,7 +28,6 @@ from repro.models.model import (  # noqa: E402
     decode_step,
     init_params,
     prefill,
-    train_loss,
 )
 from repro.sharding import planner  # noqa: E402
 from repro.sharding.act import set_batch_axes, set_model_axis  # noqa: E402

@@ -1,35 +1,120 @@
-"""Serving launcher: loads (or inits) a checkpoint and serves batched
-requests with the continuous-batching engine.
+"""Serving launcher: front a running fleet with the analyst gateway.
 
-On real hardware this runs under the production mesh with the planner's
-serve shardings (the dry-run proves those compile for every arch); on CPU
-it serves the reduced config — same code path.
+The default mode boots a `FleetSimulator`, opens `--sessions` concurrent
+analyst sessions against it through `repro.serve.FleetGateway`, replays a
+deterministic request mix (fleet gauges, windowed statistics, quantile
+queries, federated rounds, analytics windows), and prints every response
+plus the latency summary. Everything is a function of --seed and the
+request trace: re-running prints byte-identical response bodies.
 
-Run: PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --requests 8
+    PYTHONPATH=src python -m repro.launch.serve --clients 1024 --sessions 4
+
+`--llm` switches to the original LLM serving path (continuous-batching
+`ServeEngine` over a transformer checkpoint):
+
+    PYTHONPATH=src python -m repro.launch.serve --llm --arch qwen3-4b
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_config, get_tiny
-from repro.models import init_params
-from repro.serve.engine import Request, ServeEngine, serve_loop
 
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--llm", action="store_true",
+                    help="serve an LLM (ServeEngine) instead of the fleet")
+    # -- fleet gateway mode -------------------------------------------- #
+    ap.add_argument("--clients", type=int, default=256)
+    ap.add_argument("--sessions", type=int, default=4,
+                    help="concurrent analyst sessions")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenario", default="mixed")
+    ap.add_argument("--plane", default="host",
+                    help="signal plane backend: host | sharded")
+    ap.add_argument("--signal", default="Vehicle.FuelRate")
+    ap.add_argument("--warmup-ticks", type=int, default=16,
+                    help="world ticks before the first request")
+    ap.add_argument("--rounds", type=int, default=1,
+                    help="federated rounds submitted per session")
+    ap.add_argument("--windows", type=int, default=1,
+                    help="analytics windows submitted per session")
+    ap.add_argument("--admit-per-tick", type=int, default=None,
+                    help="cap admissions per tick boundary (backpressure)")
+    ap.add_argument("--leave", type=float, default=0.0,
+                    help="per-tick ignition-off probability")
+    ap.add_argument("--return", dest="p_return", type=float, default=0.0,
+                    help="per-tick ignition-on probability")
+    ap.add_argument("--stragglers", type=float, default=0.0,
+                    help="fraction of slow clients")
+    # -- LLM mode ------------------------------------------------------ #
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--batch-size", type=int, default=4)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
+
+
+def _fleet_main(args: argparse.Namespace) -> None:
+    from repro.fleet.simulator import Backends, FleetSimulator, SimConfig
+    from repro.serve.gateway import FleetGateway
+
+    sim = FleetSimulator(
+        SimConfig(
+            n_clients=args.clients,
+            seed=args.seed,
+            scenario=args.scenario,
+            p_leave=args.leave,
+            p_return=args.p_return,
+            straggler_fraction=args.stragglers,
+            backends=Backends(plane=args.plane),
+        )
+    )
+    for _ in range(args.warmup_ticks):
+        sim.tick()
+    gw = FleetGateway(sim, admit_per_tick=args.admit_per_tick)
+
+    # the deterministic request mix every session replays: a dashboard
+    # poll, fleet-level statistics, a percentile query, then the
+    # submissions — all in flight concurrently across sessions
+    t0 = time.perf_counter()
+    for s in range(args.sessions):
+        sess = gw.session(f"analyst-{s}")
+        sess.gauges()
+        sess.platform()
+        sess.fleet_stats(args.signal)
+        sess.quantile(args.signal, 0.9)
+        for _ in range(args.rounds):
+            sess.submit_round()
+        for _ in range(args.windows):
+            sess.submit_window(args.signal, sketch=True)
+    ticks = gw.run_until_idle()
+    wall = time.perf_counter() - t0
+
+    responses = [r for s in gw._sessions.values() for r in s.inbox]
+    responses.sort(key=lambda r: r.seq)
+    for r in responses:
+        print(r.encode().decode())
+    lat = np.asarray([r.ticks for r in responses], np.float64)
+    print(
+        f"-- {len(responses)} responses over {ticks} ticks "
+        f"({len(responses) / max(wall, 1e-9):.0f} resp/s wall); "
+        f"response ticks p50={np.percentile(lat, 50):.0f} "
+        f"p99={np.percentile(lat, 99):.0f}"
+    )
+
+
+def _llm_main(args: argparse.Namespace) -> None:
+    import jax
+
+    from repro.configs import get_config, get_tiny
+    from repro.models import init_params
+    from repro.serve.engine import Request, ServeEngine, serve_loop
 
     cfg = get_config(args.arch) if args.full else get_tiny(args.arch)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -52,5 +137,13 @@ def main() -> None:
         print(rid, results[rid])
 
 
+def main(argv: list[str] | None = None) -> None:
+    args = build_parser().parse_args(argv)
+    if args.llm:
+        _llm_main(args)
+    else:
+        _fleet_main(args)
+
+
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

@@ -28,7 +28,6 @@ from repro.core import EdgeClient, LocalDisk, User, make_platform
 from repro.data.pipeline import synthetic_batch
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.model import init_params
-from repro.sharding import planner
 from repro.train.checkpoint import BlobStore, CheckpointManager
 from repro.train.optimizer import OptimizerConfig, init_opt_state
 from repro.train.train_step import make_train_step
@@ -105,7 +104,7 @@ class TrainRun:
     # ------------------------------------------------------------------ #
     def _build_step(self):
         if self._step_fn is None:
-            state_sh = None  # host mesh: let jit place things
+            # host mesh: let jit place things
             self._step_fn = jax.jit(make_train_step(self.cfg, self.opt_cfg))
         return self._step_fn
 

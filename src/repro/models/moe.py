@@ -22,7 +22,6 @@ Design notes (these matter for the sharding story — see DESIGN.md §5):
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

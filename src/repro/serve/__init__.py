@@ -1,0 +1,18 @@
+"""Serving: the fleet analyst gateway (`repro.serve.gateway`) and the
+LLM continuous-batching engine (`repro.serve.engine`).
+
+Only the gateway is re-exported here — the LLM engine pulls in model
+code and is imported explicitly by the paths that serve it.
+"""
+from repro.serve.gateway import (
+    AnalystSession,
+    FleetGateway,
+    GatewayRequest,
+    GatewayResponse,
+    Ticket,
+)
+
+__all__ = [
+    "AnalystSession", "FleetGateway", "GatewayRequest", "GatewayResponse",
+    "Ticket",
+]

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.model import ArchConfig, decode_step, init_cache, prefill
+from repro.models.model import ArchConfig, decode_step, prefill
 
 
 @dataclasses.dataclass

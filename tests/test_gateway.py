@@ -1,0 +1,279 @@
+"""The analyst gateway's determinism contract (ROADMAP item 5).
+
+* replay: same seed + same request trace -> byte-identical
+  `GatewayResponse.encode()` streams, submissions included
+* reads never perturb the world: a simulator serving a read-heavy trace
+  stays bit-identical to an untouched twin
+* interleaved sessions see the answers a lone session would (serial
+  oracle), and statistics answers match an independent numpy merge of
+  per-vehicle `sketch_reference` folds
+* progress queries observe an in-flight federated round
+* `admit_per_tick` backpressure turns overload into deterministic
+  queueing delay
+* bad requests answer ok=False instead of crashing the world
+* host and client-sharded planes serve identical statistics bodies
+
+Runs in the tier-1 lane and again in CI's 8-device lane (XLA_FLAGS
+--xla_force_host_platform_device_count=8), where the sharded-plane
+parity case exercises a real multi-device layout.
+"""
+import numpy as np
+import pytest
+
+from repro.fleet.simulator import Backends, FleetSimulator, SimConfig
+from repro.kernels.sketch import SketchSpec, sketch_reference
+from repro.serve import FleetGateway
+
+SIGNAL = "Vehicle.FuelRate"
+WINDOW = 16
+
+
+def make_sim(n=48, seed=7, plane="host", **kw):
+    cfg = SimConfig(
+        n_clients=n,
+        seed=seed,
+        scenario="mixed",
+        signal_history=32,
+        backends=Backends(plane=plane),
+        **kw,
+    )
+    sim = FleetSimulator(cfg)
+    for _ in range(WINDOW + 2):  # fill the window the queries read
+        sim.tick()
+    return sim
+
+
+def drive_mixed_trace(gw):
+    """A two-session trace with reads and submissions in flight at once."""
+    a, b = gw.session("ana"), gw.session("bob")
+    a.gauges()
+    b.fleet_stats(SIGNAL, window=WINDOW)
+    a.quantile(SIGNAL, 0.9, window=WINDOW)
+    a.submit_round(dim=8, n_samples=4)
+    b.submit_window(SIGNAL, window=WINDOW, sketch=True)
+    gw.tick()
+    b.window(3, SIGNAL, 5)
+    a.platform()
+    gw.run_until_idle()
+    out = [r for s in gw._sessions.values() for r in s.inbox]
+    out.sort(key=lambda r: r.seq)
+    return out
+
+
+# --------------------------------------------------------------------- #
+# replay + purity                                                       #
+# --------------------------------------------------------------------- #
+def test_replay_is_byte_identical():
+    """The acceptance bar: twin worlds, same trace -> same bytes."""
+    runs = []
+    for _ in range(2):
+        gw = FleetGateway(make_sim())
+        runs.append([r.encode() for r in drive_mixed_trace(gw)])
+    assert runs[0] == runs[1]
+    assert all(isinstance(b, bytes) for b in runs[0])
+
+
+def test_reads_do_not_perturb_the_world():
+    """A read-heavy trace leaves the simulator bit-identical to a twin
+    that ticked the same number of times with no gateway at all."""
+    sim, twin = make_sim(), make_sim()
+    gw = FleetGateway(sim)
+    sess = gw.session("ana")
+    for k in range(6):
+        sess.gauges()
+        sess.quantile(SIGNAL, 0.5, window=WINDOW)
+        sess.window(k % sim.cfg.n_clients, SIGNAL, 4)
+        gw.tick()
+        twin.tick()
+    gw.run_until_idle()
+    while twin.t < sim.t:
+        twin.tick()
+
+    assert sim.t == twin.t
+    assert sim.metrics.fleet_gauges() == twin.metrics.fleet_gauges()
+    b1, b2 = sim.broker, twin.broker
+    assert (b1.published, b1.delivered, b1.dropped) == (
+        b2.published, b2.delivered, b2.dropped
+    )
+    spec = SketchSpec(window=WINDOW)
+    s1 = sim.plane.fleet_sketch(SIGNAL, spec)
+    s2 = twin.plane.fleet_sketch(SIGNAL, spec)
+    np.testing.assert_array_equal(s1.counts, s2.counts)
+    np.testing.assert_array_equal(s1.means, s2.means)
+    np.testing.assert_array_equal(s1.hists, s2.hists)
+    np.testing.assert_array_equal(s1.qvals, s2.qvals)
+    for row in range(sim.cfg.n_clients):
+        assert sim.plane.window(row, SIGNAL, 8) == twin.plane.window(
+            row, SIGNAL, 8
+        )
+
+
+def test_interleaved_sessions_match_serial_oracle():
+    """Three sessions racing reads get exactly the bodies one lone
+    session sees at the same boundaries in a twin world."""
+    gw = FleetGateway(make_sim())
+    sessions = [gw.session(f"s{i}") for i in range(3)]
+    for i, s in enumerate(sessions):  # interleaved arrival order
+        s.fleet_stats(SIGNAL, window=WINDOW)
+        s.quantile(SIGNAL, 0.75, window=WINDOW)
+        s.window(i, SIGNAL, 4)
+    gw.run_until_idle()
+
+    lone = FleetGateway(make_sim()).session("only")
+    t_fs = lone.fleet_stats(SIGNAL, window=WINDOW)
+    t_q = lone.quantile(SIGNAL, 0.75, window=WINDOW)
+    t_w = [lone.window(i, SIGNAL, 4) for i in range(3)]
+    lone.gateway.run_until_idle()  # one boundary admits the whole trace
+    oracle = {("fleet_stats",): t_fs.response.body,
+              ("quantile",): t_q.response.body}
+    for i, t in enumerate(t_w):
+        oracle[("window", i)] = t.response.body
+
+    for i, s in enumerate(sessions):
+        by_kind = {r.kind: r for r in s.inbox}
+        assert by_kind["fleet_stats"].body == oracle[("fleet_stats",)]
+        assert by_kind["quantile"].body == oracle[("quantile",)]
+        assert by_kind["window"].body == oracle[("window", i)]
+
+
+# --------------------------------------------------------------------- #
+# statistics correctness (independent numpy oracle)                     #
+# --------------------------------------------------------------------- #
+def _host_merge(refs, q):
+    """Re-derive the fleet quantile from per-vehicle reference sketches
+    the way `merge_quantile_sketches` + `_FleetStats.quantile` do."""
+    vals, ws = [], []
+    for r in refs:
+        c = r["count"]
+        if c == 0:
+            continue
+        vals += r["qsk"]
+        ws += [np.float32(c) / np.float32(len(r["qsk"]))] * len(r["qsk"])
+    order = np.argsort(np.asarray(vals, np.float32), kind="stable")
+    v = np.asarray(vals, np.float32)[order]
+    cw = np.cumsum(np.asarray(ws, np.float64)[order])
+    target = min(max(q, 0.0), 1.0) * float(cw[-1])
+    i = min(int(np.searchsorted(cw, target, side="left")), len(v) - 1)
+    return float(v[i])
+
+
+def test_fleet_stats_match_reference_merge():
+    sim = make_sim()
+    gw = FleetGateway(sim)
+    # snapshot the oracle first: admission reads run in the engine drain,
+    # before the plane advances, so they see exactly this ring state
+    spec = SketchSpec(window=WINDOW)
+    refs = [
+        sketch_reference(
+            [v for v in sim.plane.window(i, SIGNAL, WINDOW)
+             if v is not None and np.isfinite(v)],
+            spec,
+        )
+        for i in range(sim.cfg.n_clients)
+    ]
+    sess = gw.session("ana")
+    t_stats = sess.fleet_stats(SIGNAL, window=WINDOW, quantiles=(0.5, 0.9))
+    t_q = sess.quantile(SIGNAL, 0.9, window=WINDOW)
+    gw.run_until_idle()
+    body = t_stats.response.body
+    assert body["participants"] == sum(1 for r in refs if r["count"])
+    assert body["count"] == sum(r["count"] for r in refs)
+    hist = np.sum([r["hist"] for r in refs], axis=0)
+    assert body["hist"] == [int(v) for v in hist]
+    mean = (
+        sum(r["count"] * r["mean"] for r in refs) / body["count"]
+    )
+    assert body["mean"] == pytest.approx(mean, rel=1e-5)
+    assert body["quantiles"]["p50"] == pytest.approx(
+        _host_merge(refs, 0.5), rel=1e-6
+    )
+    assert body["quantiles"]["p90"] == pytest.approx(
+        _host_merge(refs, 0.9), rel=1e-6
+    )
+    assert t_q.response.body["value"] == body["quantiles"]["p90"]
+
+
+def test_host_and_sharded_planes_serve_identical_bodies():
+    """Plane backend is an implementation detail: statistics and window
+    reads answer bit-identically on host and client-sharded planes. (In
+    CI's multi-device lane this crosses a real 8-device layout.)"""
+    bodies = []
+    for plane in ("host", "sharded"):
+        gw = FleetGateway(make_sim(plane=plane))
+        sess = gw.session("ana")
+        sess.fleet_stats(SIGNAL, window=WINDOW, quantiles=(0.25, 0.9))
+        sess.quantile(SIGNAL, 0.5, window=WINDOW)
+        sess.window(5, SIGNAL, 6)
+        gw.run_until_idle()
+        bodies.append([r.body for r in sess.inbox])
+    assert bodies[0] == bodies[1]
+
+
+# --------------------------------------------------------------------- #
+# submissions, progress, backpressure, errors                           #
+# --------------------------------------------------------------------- #
+def test_progress_observes_in_flight_round():
+    """An analyst can watch a slow round: stragglers keep the round open
+    across ticks, and per-ticket progress reads see live counts."""
+    gw = FleetGateway(make_sim(straggler_fraction=0.5))
+    sess = gw.session("ana")
+    round_t = sess.submit_round(dim=8, n_samples=4)
+    mid = []
+    for _ in range(40):
+        gw.tick()
+        if round_t.done:
+            break
+        mid.append(sess.progress(round_t))
+    assert round_t.done and round_t.response.ok
+    served = [t.response for t in mid if t.done and t.response.ok]
+    assert served, "round closed before any progress read was admitted"
+    for r in served:
+        total = r.body["total"]
+        assert total > 0
+        parts = (
+            r.body["finished"] + r.body["error"]
+            + r.body["canceled"] + r.body["active"]
+        )
+        assert parts == total
+    # counts are monotone while the round drains
+    fin = [r.body["finished"] for r in served]
+    assert fin == sorted(fin)
+    assert round_t.response.body["participants"] <= served[0].body["total"]
+
+
+def test_admit_per_tick_throttles_deterministically():
+    """Overload becomes queueing delay: 5 requests through a 1/tick
+    admission cap are served on 5 consecutive boundaries."""
+    gw = FleetGateway(make_sim(), admit_per_tick=1)
+    sess = gw.session("ana")
+    t0 = gw.sim.t
+    tickets = [sess.gauges() for _ in range(5)]
+    gw.run_until_idle()
+    assert [t.response.served_tick for t in tickets] == [
+        t0 + 1 + i for i in range(5)
+    ]
+    assert [t.response.ticks for t in tickets] == [1, 2, 3, 4, 5]
+
+
+def test_bad_requests_answer_instead_of_crashing():
+    gw = FleetGateway(make_sim())
+    sess = gw.session("ana")
+    unknown_client = sess.signal("veh-none", SIGNAL)
+    unknown_kind = sess.ask("divine")
+    stale_progress = sess.progress(10_000)
+    gw.run_until_idle()
+    for t in (unknown_client, unknown_kind, stale_progress):
+        assert t.done and not t.response.ok
+        assert "error" in t.response.body
+    # the world is still serviceable afterwards
+    ok = sess.gauges()
+    gw.run_until_idle()
+    assert ok.response.ok
+
+
+def test_gateway_requires_event_engine():
+    sim = FleetSimulator(SimConfig(n_clients=8, backends=Backends(engine="dense")))
+    with pytest.raises(ValueError, match="event engine"):
+        FleetGateway(sim)
+    with pytest.raises(ValueError, match="admit_per_tick"):
+        FleetGateway(make_sim(n=8), admit_per_tick=0)

@@ -1,6 +1,5 @@
 """Infrastructure units: blob store, data pipeline determinism, HLO
 collective parsing, wire-format codecs."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -48,15 +47,11 @@ def test_pipeline_multimodal_shapes():
 
 
 def test_collective_parser():
-    import importlib.util, pathlib
+    import pathlib
 
-    spec = importlib.util.spec_from_file_location(
-        "_dry", pathlib.Path("src/repro/launch/dryrun.py")
-    )
     # parse functions without executing module-level XLA device locking:
     src = pathlib.Path("src/repro/launch/dryrun.py").read_text()
     ns: dict = {}
-    import re as _re
 
     block = src[src.index("_DTYPE_BYTES") : src.index("def sharded_bytes")]
     exec("import re\n" + block, ns)

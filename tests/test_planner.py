@@ -2,7 +2,6 @@
 no devices needed — specs are pure metadata)."""
 import jax
 import jax.numpy as jnp
-import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.configs import get_config

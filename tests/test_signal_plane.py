@@ -7,7 +7,6 @@ import pytest
 from repro.core.signals import (
     CsvSignalBroker,
     FleetSignalPlane,
-    ScriptedSignalBroker,
     SignalHandler,
     parse_signal_csv,
 )

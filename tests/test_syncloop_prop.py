@@ -20,10 +20,10 @@ import pytest
 
 pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
-from repro.core import (
+from repro.core import (  # noqa: E402
     Broker,
     EdgeClient,
     FaultPlan,

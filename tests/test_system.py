@@ -1,13 +1,8 @@
 """End-to-end platform behaviour (paper §5 workflow, §4.1.1 lifecycle)."""
-import pytest
-
 from repro.core import (
     EdgeClient,
-    FlakyServer,
-    LocalDisk,
     ResourceLimits,
     ScriptedSignalBroker,
-    Server,
     TaskStatus,
     User,
     make_platform,
@@ -142,7 +137,7 @@ def test_payload_cache_hits_for_immutable_docs():
     store, broker, servers, clients, user, pump = make_world(n_vehicles=1)
     c, _ = clients[0]
     payload = user.payload("import autospada\nautospada.publish({'ok': 1})\n")
-    a1 = user.assignment("a1", [user.task("veh-0", payload)]).commit()
+    user.assignment("a1", [user.task("veh-0", payload)]).commit()
     pump()
     fetches_before = len(c.disk.payload_cache)
     a2 = user.assignment("a2", [user.task("veh-0", payload)]).commit()
